@@ -1,0 +1,68 @@
+"""Paper Fig. 7: SSSP execution time per strategy per graph, split into
+useful kernel time vs strategy overhead.  Validates:
+
+* every proposed strategy (WD/NS/HP) beats the BS baseline on SSSP;
+* EP is fastest where it fits, and FAILS on Graph500-class memory;
+* WD best among node-based for skewed graphs, NS best for road-like;
+* HP completes the large graphs with a large reduction vs BS.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BENCH_GRAPHS, csv_line, get_graph,
+                               run_strategy, save_result)
+
+STRATEGIES = ["BS", "EP", "WD", "NS", "HP"]
+
+
+def run(verbose: bool = True):
+    rows = []
+    for gname in BENCH_GRAPHS:
+        g = get_graph(gname, weighted=True)
+        for s in STRATEGIES:
+            try:
+                res = run_strategy(g, s)
+                rows.append({
+                    "graph": gname, "strategy": s, "status": "ok",
+                    "total_s": res.total_seconds,
+                    "kernel_s": res.kernel_seconds,
+                    "overhead_s": res.overhead_seconds,
+                    "iterations": res.iterations,
+                    "edges_relaxed": res.edges_relaxed,
+                    "mteps": res.mteps,
+                    "state_bytes": res.state_bytes,
+                })
+            except MemoryError as exc:   # EP on Graph500 (paper §IV)
+                rows.append({"graph": gname, "strategy": s,
+                             "status": "oom", "error": str(exc)})
+    # paper-claim check: strategy vs BS speedups
+    claims = {}
+    for gname in BENCH_GRAPHS:
+        base = next(r for r in rows if r["graph"] == gname
+                    and r["strategy"] == "BS")
+        for r in rows:
+            if r["graph"] == gname and r["status"] == "ok" \
+                    and r["strategy"] != "BS":
+                claims[f"{gname}:{r['strategy']}_vs_BS"] = round(
+                    base["total_s"] / r["total_s"], 2)
+    save_result("fig7_sssp", {"rows": rows, "speedups_vs_BS": claims})
+    lines = []
+    for r in rows:
+        if r["status"] == "ok":
+            lines.append(csv_line(
+                f"fig7_sssp/{r['graph']}/{r['strategy']}",
+                r["total_s"] * 1e6,
+                f"kernel_us={r['kernel_s']*1e6:.0f};mteps={r['mteps']:.2f}"))
+        else:
+            lines.append(csv_line(
+                f"fig7_sssp/{r['graph']}/{r['strategy']}", float("nan"),
+                "status=oom(COO-memory-wall)"))
+    if verbose:
+        print("\n".join(lines))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Fig. 8: BFS execution times per strategy.  BFS is memory-bound
+with near-zero per-edge compute, so overheads dominate on small graphs —
+the paper's observation that node-based strategies can lose to BS on BFS
+while EP still wins, and HP pays off only at Graph500 scale."""
+
+from __future__ import annotations
+
+from benchmarks.common import (BENCH_GRAPHS, csv_line, get_graph,
+                               run_strategy, save_result)
+
+STRATEGIES = ["BS", "EP", "WD", "NS", "HP"]
+
+
+def run(verbose: bool = True):
+    rows = []
+    for gname in BENCH_GRAPHS:
+        g = get_graph(gname, weighted=False)
+        for s in STRATEGIES:
+            try:
+                res = run_strategy(g, s)
+                rows.append({
+                    "graph": gname, "strategy": s, "status": "ok",
+                    "total_s": res.total_seconds,
+                    "kernel_s": res.kernel_seconds,
+                    "overhead_s": res.overhead_seconds,
+                    "iterations": res.iterations,
+                    "mteps": res.mteps,
+                })
+            except MemoryError as exc:
+                rows.append({"graph": gname, "strategy": s,
+                             "status": "oom", "error": str(exc)})
+    save_result("fig8_bfs", {"rows": rows})
+    lines = []
+    for r in rows:
+        if r["status"] == "ok":
+            lines.append(csv_line(
+                f"fig8_bfs/{r['graph']}/{r['strategy']}",
+                r["total_s"] * 1e6,
+                f"overhead_us={r['overhead_s']*1e6:.0f}"))
+        else:
+            lines.append(csv_line(
+                f"fig8_bfs/{r['graph']}/{r['strategy']}", float("nan"),
+                "status=oom(COO-memory-wall)"))
+    if verbose:
+        print("\n".join(lines))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Fig. 9: three-axis ranking (execution time, memory requirement,
+implementation complexity) of the five strategies, derived from the
+measured fig7 results + strategy state bytes.  Implementation-complexity
+ranks are the paper's qualitative assessment (Table I)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, csv_line, save_result
+
+# paper Table I / §IV-B qualitative ranking (1 = best)
+IMPL_COMPLEXITY = {"BS": 1, "EP": 2, "WD": 4, "NS": 5, "HP": 3}
+
+
+def run(verbose: bool = True):
+    path = os.path.join(RESULTS_DIR, "fig7_sssp.json")
+    if not os.path.exists(path):
+        from benchmarks import fig7_sssp
+        fig7_sssp.run(verbose=False)
+    rows = json.load(open(path))["rows"]
+    strategies = ["BS", "EP", "WD", "NS", "HP"]
+    time_score, mem_score = {}, {}
+    for s in strategies:
+        ok = [r for r in rows if r["strategy"] == s and r["status"] == "ok"]
+        oom = [r for r in rows if r["strategy"] == s and r["status"] != "ok"]
+        time_score[s] = float(np.mean([r["total_s"] for r in ok])) if ok \
+            else float("inf")
+        mem_score[s] = float(np.mean([r["state_bytes"] for r in ok])) \
+            + (1e12 if oom else 0)
+    t_rank = {s: i + 1 for i, s in
+              enumerate(sorted(strategies, key=lambda s: time_score[s]))}
+    m_rank = {s: i + 1 for i, s in
+              enumerate(sorted(strategies, key=lambda s: mem_score[s]))}
+    out = [{"strategy": s, "time_rank": t_rank[s], "memory_rank": m_rank[s],
+            "impl_rank": IMPL_COMPLEXITY[s]} for s in strategies]
+    save_result("fig9_tradeoffs", {"rows": out})
+    lines = [csv_line(f"fig9/{r['strategy']}", 0.0,
+                      f"time_rank={r['time_rank']};mem_rank={r['memory_rank']};"
+                      f"impl_rank={r['impl_rank']}") for r in out]
+    if verbose:
+        print("\n".join(lines))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Framework-side microbenchmark: one smoke-config train step per assigned
+architecture on the host device (jit-compiled, timed after warm-up)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, save_result
+from repro.configs import ARCHITECTURES, get_config
+from repro.models.model import LanguageModel
+from repro.models.params import init_params
+from repro.launch.steps import make_optimizer
+
+
+def run(verbose: bool = True):
+    rows, lines = [], []
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+    for arch in ARCHITECTURES:
+        cfg = get_config(arch).smoke()
+        model = LanguageModel(cfg)
+        params = init_params(model.param_specs(), key)
+        opt = make_optimizer(cfg)
+        state = {"params": params, "opt": opt.init(params)}
+        B, S = 2, 128
+        shape = (B, S, cfg.num_codebooks) if cfg.family == "audio" else (B, S)
+        tokens = jnp.asarray(rng.integers(2, cfg.vocab_size, shape),
+                             jnp.int32)
+        batch = {"tokens": tokens, "labels": tokens}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jnp.asarray(
+                rng.standard_normal((B, cfg.num_image_tokens, cfg.d_model))
+                * 0.02, jnp.bfloat16)
+
+        @jax.jit
+        def step(state, batch):
+            grads, metrics = jax.grad(
+                lambda p: model.loss(p, batch), has_aux=True)(state["params"])
+            p, o, m = opt.update(grads, state["opt"], state["params"])
+            return {"params": p, "opt": o}, metrics
+
+        state2, metrics = step(state, batch)
+        jax.block_until_ready(state2["params"])
+        t0 = time.perf_counter()
+        n = 3
+        for _ in range(n):
+            state2, metrics = step(state2, batch)
+        jax.block_until_ready(state2["params"])
+        dt = (time.perf_counter() - t0) / n
+        loss = float(metrics["loss"])
+        rows.append({"arch": arch, "step_s": dt, "loss": loss,
+                     "tokens_per_s": B * S / dt})
+        lines.append(csv_line(f"lm_step/{arch}", dt * 1e6,
+                              f"loss={loss:.3f};tok_s={B*S/dt:.0f}"))
+    save_result("lm_step", {"rows": rows})
+    if verbose:
+        print("\n".join(lines))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

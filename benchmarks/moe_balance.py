@@ -1,0 +1,71 @@
+"""Beyond-paper: the paper's strategies as MoE dispatch policies
+(DESIGN.md §3) — padding waste, drop rate and step time per policy under a
+skewed router, mirroring the BS/WD/NS/HP trade-offs at the LM layer."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, save_result
+from repro.moe.balancing import DISPATCH_METHODS, moe_dispatch, topk_route
+
+
+def run(verbose: bool = True):
+    rng = np.random.default_rng(0)
+    B, S, D, E, K, F = 4, 512, 128, 16, 2, 256
+    x = jnp.asarray(rng.standard_normal((B, S, D)) * 0.1, jnp.float32)
+    # skewed router: power-law expert popularity (the "degree skew")
+    bias = jnp.asarray(np.sort(rng.zipf(1.5, E))[::-1].copy(), jnp.float32)
+    logits = jnp.asarray(rng.standard_normal((B, S, E)), jnp.float32) \
+        + jnp.log1p(bias)
+    weights, ids, _ = topk_route(logits, K)
+    wp = {
+        "w_up": jnp.asarray(rng.standard_normal((E, D, F)) * 0.05,
+                            jnp.float32),
+        "w_gate": jnp.asarray(rng.standard_normal((E, D, F)) * 0.05,
+                              jnp.float32),
+        "w_down": jnp.asarray(rng.standard_normal((E, F, D)) * 0.05,
+                              jnp.float32),
+    }
+    capacity = int(S * K / E * 1.25) + 1
+    rows = []
+    ref_y = None
+    for method in DISPATCH_METHODS:
+        fn = jax.jit(lambda x, i, w: moe_dispatch(
+            x, i, w, wp, num_experts=E, capacity=capacity,
+            method=method)[0])
+        y = fn(x, ids, weights)
+        jax.block_until_ready(y)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            y = fn(x, ids, weights)
+        jax.block_until_ready(y)
+        dt = (time.perf_counter() - t0) / 3
+        _, stats = moe_dispatch(x, ids, weights, wp, num_experts=E,
+                                capacity=capacity, method=method)
+        if method == "sorted_block":
+            ref_y = y
+        rows.append({
+            "method": method, "time_s": dt,
+            "dropped_frac": float(stats["dropped_frac"]),
+            "padding_waste": float(stats["padding_waste"]),
+            "max_err_vs_dropless": (
+                float(jnp.max(jnp.abs(y - ref_y))) if ref_y is not None
+                else None),
+        })
+    save_result("moe_balance", {"rows": rows, "capacity": capacity})
+    lines = [csv_line(
+        f"moe_balance/{r['method']}", r["time_s"] * 1e6,
+        f"dropped={r['dropped_frac']:.3f};waste={r['padding_waste']:.3f}")
+        for r in rows]
+    if verbose:
+        print("\n".join(lines))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

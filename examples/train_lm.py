@@ -1,0 +1,83 @@
+"""End-to-end training driver: data pipeline → model → optimizer →
+fault-tolerant trainer with async checkpointing, on the host mesh.
+
+Default preset is a ~100M-parameter qwen3-family model (use --preset tiny
+for a CI-speed run).  Demonstrates: deterministic restart (kill it
+mid-run and rerun — it resumes from the last committed checkpoint),
+straggler logging, loss descent.
+
+    PYTHONPATH=src python examples/train_lm.py --preset tiny --steps 30
+"""
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import TokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import LanguageModel
+from repro.models.params import init_params, param_count
+from repro.optim.adamw import AdamW
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.trainer import TrainConfig, Trainer
+
+PRESETS = {
+    # ~100M params: the deliverable-scale end-to-end driver
+    "100m": dict(num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+                 head_dim=64, d_ff=2048, vocab_size=32768, seq=512, batch=8),
+    "tiny": dict(num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+                 head_dim=32, d_ff=256, vocab_size=1024, seq=128, batch=4),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO)
+
+    p = dict(PRESETS[args.preset])
+    seq, batch = p.pop("seq"), p.pop("batch")
+    cfg = dataclasses.replace(get_config(args.arch), **p)
+    model = LanguageModel(cfg)
+    specs = model.param_specs()
+    print(f"model: {cfg.name} derivative, {param_count(specs):,} params")
+
+    params = init_params(specs, jax.random.PRNGKey(0))
+    opt = AdamW(learning_rate=warmup_cosine(3e-4, 20, args.steps))
+    state = {"params": params, "opt": opt.init(params)}
+
+    pipeline = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=seq,
+                             global_batch=batch, seed=0)
+
+    @jax.jit
+    def train_step(state, batch):
+        grads, metrics = jax.grad(
+            lambda p: model.loss(p, batch), has_aux=True)(state["params"])
+        new_p, new_o, om = opt.update(grads, state["opt"], state["params"])
+        metrics.update(om)
+        return {"params": new_p, "opt": new_o}, metrics
+
+    trainer = Trainer(train_step, state, pipeline,
+                      TrainConfig(total_steps=args.steps,
+                                  checkpoint_every=10,
+                                  checkpoint_dir=args.ckpt_dir,
+                                  log_every=5))
+    resumed = trainer.maybe_restore()
+    print(f"resumed from checkpoint: {resumed} (step {trainer.step})")
+    history = trainer.run()
+    first, last = history[0].metrics["loss"], history[-1].metrics["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {len(history)} steps "
+          f"({'improved ✓' if last < first else 'no improvement ✗'})")
+    print(f"stragglers flagged: {trainer.straggler_count}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Breadth-first search as level propagation (paper §IV processing kernel).
+
+BFS is the memory-bound member of the pair: almost no arithmetic per edge,
+so strategy overheads dominate unless the graph is large (paper Fig. 8).
+Computing the minimum level distributes over +1, which is exactly the
+distributivity property edge-based parallelism requires (§II-B).
+"""
+
+from __future__ import annotations
+
+from repro.core.engine import RunResult, make_strategy, run
+from repro.core.graph import CSRGraph
+
+
+def bfs(graph: CSRGraph, source: int = 0, strategy: str = "WD",
+        record_degrees: bool = False, **strategy_kwargs) -> RunResult:
+    if graph.wt is not None:
+        graph = CSRGraph(graph.row_ptr, graph.col, None,
+                         graph.num_nodes, graph.num_edges, graph.max_degree)
+    strat = make_strategy(strategy, **strategy_kwargs)
+    return run(graph, source, strat, record_degrees=record_degrees)

@@ -1,0 +1,16 @@
+"""Single-source shortest paths (Bellman-Ford relaxation to fixed point,
+paper Fig. 2 pseudocode).  The compute-heavier kernel of the pair: per-edge
+add + compare + scatter-min, so load balancing pays off most here
+(paper Fig. 7 — every proposed strategy beats the baseline)."""
+
+from __future__ import annotations
+
+from repro.core.engine import RunResult, make_strategy, run
+from repro.core.graph import CSRGraph
+
+
+def sssp(graph: CSRGraph, source: int = 0, strategy: str = "WD",
+         record_degrees: bool = False, **strategy_kwargs) -> RunResult:
+    assert graph.wt is not None, "SSSP needs a weighted graph"
+    strat = make_strategy(strategy, **strategy_kwargs)
+    return run(graph, source, strat, record_degrees=record_degrees)

@@ -1,0 +1,8 @@
+# The paper's primary contribution: dynamic load-balancing strategies for
+# data-driven graph algorithms, adapted from CUDA thread semantics to
+# TPU/JAX array semantics.  See DESIGN.md §2 for the mapping.
+from repro.core.graph import CSRGraph, COOGraph, INF, graph_stats  # noqa: F401
+from repro.core.engine import run, make_strategy, RunResult, reference_distances  # noqa: F401
+from repro.core.strategies import STRATEGIES  # noqa: F401
+from repro.core.node_split import find_mdt, split_graph  # noqa: F401
+from repro.core import balance  # noqa: F401

@@ -1,0 +1,463 @@
+"""The five load-balancing strategies (paper §II–III), adapted to TPU/JAX.
+
+Strategy        unit of work                     graph format
+--------        ------------                     ------------
+BS  (baseline)  node; lane loops over its edges  CSR
+EP  (edge)      edge; flat COO worklist          COO (2E–3E memory)
+WD  (workload   E/T-edge block over the active   CSR + prefix sum
+     decomp.)   frontier via merge-path search
+NS  (node       node, after splitting deg>MDT    CSR (rebuilt host-side)
+     split)     nodes into ⌈deg/MDT⌉ children
+HP  (hier.)     ≤MDT edges/node/sub-iteration;   CSR
+                hybrid fallback to WD
+
+CUDA-thread semantics map to dense vectorized batches:
+  * atomicMin(dist[d], alt)  →  dist.at[d].min(alt)        (scatter-min)
+  * worklist push w/chunking →  flag → cumsum → run_fill   (1 slot/node)
+  * Thrust inclusive_scan    →  jnp.cumsum
+  * find_offsets kernel      →  vectorized searchsorted (merge-path); the
+                                Pallas in-VMEM variant lives in
+                                repro.kernels.find_offsets
+Load imbalance materializes as masked/padded lanes — measurable as wasted
+FLOPs/bytes rather than warp divergence (see repro.core.balance).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import node_split
+from repro.core.graph import CSRGraph, COOGraph, INF
+from repro.core.worklist import bucket, compact_mask, run_fill
+
+try:  # optional Pallas fast path for the WD offset search
+    from repro.kernels import find_offsets as _pallas_find_offsets
+except Exception:  # pragma: no cover - kernels are optional at import time
+    _pallas_find_offsets = None
+
+
+# ---------------------------------------------------------------------------
+# shared relax primitive: dist[dst] = min(dist[dst], dist[src] + w)
+# ---------------------------------------------------------------------------
+
+def _edge_weight(g, eidx: jax.Array) -> jax.Array:
+    if g.wt is not None:
+        return g.wt[eidx]
+    return jnp.ones(eidx.shape, jnp.int32)
+
+
+def _apply_relax(dist, updated, src, dst, w, valid):
+    """Vectorized relax over a batch of (src, dst, w) with a validity mask.
+
+    Deterministic scatter-min replaces CUDA atomicMin."""
+    src_c = jnp.clip(src, 0, dist.shape[0] - 1)
+    dst_c = jnp.clip(dst, 0, dist.shape[0] - 1)
+    alt = dist[src_c] + w
+    improve = valid & (alt < dist[dst_c])
+    dist = dist.at[dst_c].min(jnp.where(improve, alt, INF))
+    updated = updated.at[dst_c].max(improve)
+    return dist, updated, improve
+
+
+# ---------------------------------------------------------------------------
+# BS — node-based baseline (LonestarGPU-style)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cap",))
+def bs_relax(g: CSRGraph, dist, frontier, *, cap: int):
+    """Each frontier slot ("thread") walks its own adjacency list.
+
+    The walk runs for max-degree-in-frontier steps with lanes masked once
+    their node is exhausted — the TPU manifestation of the paper's
+    node-based imbalance (idle lanes ∝ degree variance)."""
+    del cap  # shapes already carry it; kept for bucketed specialization
+    mask = frontier >= 0
+    f = jnp.where(mask, frontier, 0)
+    deg = jnp.where(mask, g.row_ptr[f + 1] - g.row_ptr[f], 0)
+    fmax = jnp.max(deg)
+    base = g.row_ptr[f]
+    updated = jnp.zeros((dist.shape[0],), jnp.bool_)
+
+    def cond(c):
+        return c[0] < fmax
+
+    def body(c):
+        d, dist, updated = c
+        valid = mask & (d < deg)
+        eidx = jnp.clip(base + d, 0, g.num_edges - 1)
+        dist, updated, _ = _apply_relax(
+            dist, updated, f, g.col[eidx], _edge_weight(g, eidx), valid)
+        return d + 1, dist, updated
+
+    _, dist, updated = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), dist, updated))
+    return dist, updated
+
+
+# ---------------------------------------------------------------------------
+# EP — edge-based parallelism over a COO edge worklist
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cap",))
+def ep_relax(coo: COOGraph, dist, edge_wl, *, cap: int):
+    """One lane per worklist edge — near-perfect balance (paper §II-B)."""
+    del cap
+    mask = edge_wl >= 0
+    e = jnp.where(mask, edge_wl, 0)
+    src, dst = coo.src[e], coo.dst[e]
+    w = _edge_weight(coo, e)
+    updated = jnp.zeros((dist.shape[0],), jnp.bool_)
+    dist, updated, improve = _apply_relax(dist, updated, src, dst, w, mask)
+    return dist, updated, improve, dst
+
+
+@partial(jax.jit, static_argnames=("cap_out",))
+def ep_push_chunked(row_ptr, updated_mask, total, *, cap_out: int):
+    """Work-chunked push (§IV-D): ONE output-range reservation per updated
+    node (flag → compact → run_fill)."""
+    cap_nodes = updated_mask.shape[0]
+    (nodes,) = jnp.nonzero(updated_mask, size=cap_nodes, fill_value=0)
+    nvalid = jnp.sum(updated_mask)
+    deg = jnp.where(jnp.arange(cap_nodes) < nvalid,
+                    row_ptr[nodes + 1] - row_ptr[nodes], 0)
+    wl, _ = run_fill(row_ptr[nodes], deg, total, cap_out)
+    return wl
+
+
+@partial(jax.jit, static_argnames=("cap_out",))
+def ep_push_unchunked(row_ptr, improve, dst, total, *, cap_out: int):
+    """Per-edge push (the default the paper compares against in Fig. 11):
+    every improving *edge* pushes its destination's full adjacency run, so
+    a node updated by k edges is pushed k times — reproducing the worklist
+    explosion + redundancy the paper describes."""
+    deg = jnp.where(improve, row_ptr[dst + 1] - row_ptr[dst], 0)
+    wl, _ = run_fill(row_ptr[dst], deg, total, cap_out)
+    return wl
+
+
+# ---------------------------------------------------------------------------
+# WD — workload decomposition (merge-path over the frontier's edges)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cap_work", "use_pallas"))
+def wd_relax(g: CSRGraph, dist, frontier, cursor, *, cap_work: int,
+             use_pallas: bool = False):
+    """Block-distribute the frontier's edges across ``cap_work`` lanes.
+
+    prefix-sum over (remaining) frontier degrees, then every work item k
+    locates its (node, local edge) via binary search — the vectorized
+    equivalent of the paper's ``find_offsets`` + per-thread while-walk
+    (Fig. 4), with no serialization."""
+    mask = frontier >= 0
+    f = jnp.where(mask, frontier, 0)
+    deg = jnp.where(mask, g.row_ptr[f + 1] - g.row_ptr[f] - cursor, 0)
+    deg = jnp.maximum(deg, 0)
+    prefix = jnp.cumsum(deg)
+    exclusive = prefix - deg
+    total = prefix[-1]
+    k = jnp.arange(cap_work, dtype=jnp.int32)
+    if use_pallas and _pallas_find_offsets is not None:
+        node_idx = _pallas_find_offsets.find_offsets(prefix, cap_work)
+    else:
+        node_idx = jnp.searchsorted(prefix, k, side="right").astype(jnp.int32)
+    node_idx = jnp.clip(node_idx, 0, frontier.shape[0] - 1)
+    src = f[node_idx]
+    local = k - exclusive[node_idx]
+    eidx = jnp.clip(g.row_ptr[src] + cursor[node_idx] + local,
+                    0, g.num_edges - 1)
+    valid = k < total
+    updated = jnp.zeros((dist.shape[0],), jnp.bool_)
+    dist, updated, _ = _apply_relax(
+        dist, updated, src, g.col[eidx], _edge_weight(g, eidx), valid)
+    return dist, updated
+
+
+# ---------------------------------------------------------------------------
+# NS — node splitting (split graph built host-side in node_split.py)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def ns_activate(dist2, mask2, child_parent):
+    """Reflect parent attributes onto children (paper §III-B) and activate
+    children alongside their parent — children share the parent's outgoing
+    edges, so whenever the parent has work, so do they.  This extra
+    gather/compare pass is the 'extra atomics' cost of NS."""
+    dist2 = jnp.minimum(dist2, dist2[child_parent])
+    mask2 = mask2 | mask2[child_parent]
+    return dist2, mask2
+
+
+# ---------------------------------------------------------------------------
+# HP — hierarchical processing (≤ MDT edges per node per sub-iteration)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cap", "mdt"))
+def hp_sub_relax(g: CSRGraph, dist, sub, cursor, *, cap: int, mdt: int):
+    """One sub-iteration: every sublist node processes its next ≤MDT edges
+    (a dense [cap, MDT] tile — all lanes bounded by MDT, i.e. balanced
+    within the threshold, §III-C).  Returns the surviving sublist mask."""
+    del cap
+    mask = sub >= 0
+    n = jnp.where(mask, sub, 0)
+    deg = g.row_ptr[n + 1] - g.row_ptr[n]
+    j = jnp.arange(mdt, dtype=jnp.int32)[None, :]
+    pos = cursor[:, None] + j
+    valid = mask[:, None] & (pos < deg[:, None])
+    eidx = jnp.clip(g.row_ptr[n][:, None] + pos, 0, g.num_edges - 1)
+    src = jnp.broadcast_to(n[:, None], eidx.shape).reshape(-1)
+    updated = jnp.zeros((dist.shape[0],), jnp.bool_)
+    dist, updated, _ = _apply_relax(
+        dist, updated, src, g.col[eidx.reshape(-1)],
+        _edge_weight(g, eidx.reshape(-1)), valid.reshape(-1))
+    new_cursor = cursor + mdt
+    alive = mask & (new_cursor < deg)
+    return dist, updated, new_cursor, alive
+
+
+@partial(jax.jit, static_argnames=("cap_out",))
+def compact_pair(nodes, cursor, alive, *, cap_out: int):
+    """Compact (node, cursor) pairs that survive a sub-iteration."""
+    (idx,) = jnp.nonzero(alive, size=cap_out, fill_value=-1)
+    ok = idx >= 0
+    idx_c = jnp.where(ok, idx, 0)
+    return (jnp.where(ok, nodes[idx_c], -1).astype(jnp.int32),
+            jnp.where(ok, cursor[idx_c], 0).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Strategy drivers (host-side orchestration, bucketed jit dispatch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IterStats:
+    frontier_size: int
+    edges_processed: int
+    sub_iterations: int = 1
+    frontier_degrees: Optional[np.ndarray] = None  # for balance analysis
+
+
+class StrategyBase:
+    """A strategy = host preprocessing + one frontier-relax iteration."""
+
+    name = "base"
+    #: peak auxiliary device bytes (graph copies etc.) — feeds the paper's
+    #: memory-requirement axis (Fig. 9)
+    def setup(self, graph: CSRGraph) -> Any:
+        return graph
+
+    def state_bytes(self, state) -> int:
+        return state.device_bytes()
+
+    def iterate(self, state, dist, updated_mask, count, *,
+                record_degrees=False):
+        raise NotImplementedError
+
+
+class NodeBased(StrategyBase):
+    name = "BS"
+
+    def iterate(self, g, dist, updated_mask, count, *, record_degrees=False):
+        cap = bucket(count)
+        frontier = compact_mask(updated_mask, cap)
+        stats = _frontier_stats(g, frontier, count, record_degrees)
+        dist, new_mask = bs_relax(g, dist, frontier, cap=cap)
+        return dist, new_mask, stats
+
+
+class EdgeBased(StrategyBase):
+    """EP.  State = COO graph (+ the 2E/3E memory bill) + edge worklist."""
+    name = "EP"
+
+    def __init__(self, chunked: bool = True, wl_capacity_factor: float = 4.0,
+                 memory_budget_bytes: Optional[int] = None):
+        self.chunked = chunked
+        self.wl_capacity_factor = wl_capacity_factor
+        self.memory_budget_bytes = memory_budget_bytes
+
+    def setup(self, graph: CSRGraph):
+        coo = graph.to_coo()
+        need = coo.device_bytes()
+        if self.memory_budget_bytes is not None and need > self.memory_budget_bytes:
+            # Faithful reproduction of "EP fails to execute for large
+            # graphs due to insufficient memory" (paper §IV).
+            raise MemoryError(
+                f"EP COO storage needs {need} bytes > budget "
+                f"{self.memory_budget_bytes} (paper §II-B memory wall)")
+        self._degrees = np.asarray(graph.degrees)
+        return coo
+
+    def initial_worklist(self, coo: COOGraph, source: int):
+        deg = int(self._degrees[source])
+        cap = bucket(deg)
+        start = int(np.asarray(coo.row_ptr)[source])
+        wl = np.full(cap, -1, np.int32)
+        wl[:deg] = np.arange(start, start + deg, dtype=np.int32)
+        return jnp.asarray(wl), deg
+
+    def relax_and_push(self, coo, dist, edge_wl, count):
+        cap = edge_wl.shape[0]
+        dist, new_mask, improve, dst = ep_relax(coo, dist, edge_wl, cap=cap)
+        if self.chunked:
+            nodes_np = np.asarray(new_mask)
+            total = int(self._degrees[nodes_np].sum())
+            wl = ep_push_chunked(coo.row_ptr, new_mask, total,
+                                 cap_out=bucket(total))
+        else:
+            improve_np, dst_np = np.asarray(improve), np.asarray(dst)
+            total = int(self._degrees[dst_np[improve_np]].sum())
+            if total > 2 * coo.num_edges:
+                # worklist explosion (paper §II-B): duplicates spawn
+                # duplicates geometrically — apply the condensing pass the
+                # paper describes (sort+unique), charged as overhead
+                uniq = np.unique(dst_np[improve_np])
+                total = int(self._degrees[uniq].sum())
+                starts = np.asarray(coo.row_ptr)[uniq]
+                lens = self._degrees[uniq]
+                wl_np = np.full(bucket(total), -1, np.int32)
+                out = np.concatenate([np.arange(s, s + l) for s, l in
+                                      zip(starts, lens)]) if total else []
+                wl_np[: total] = out
+                wl = jnp.asarray(wl_np)
+            else:
+                wl = ep_push_unchunked(coo.row_ptr, improve, dst, total,
+                                       cap_out=bucket(total))
+        return dist, new_mask, wl, total
+
+
+class WorkloadDecomposition(StrategyBase):
+    name = "WD"
+
+    def __init__(self, use_pallas: bool = False):
+        self.use_pallas = use_pallas
+
+    def setup(self, graph: CSRGraph):
+        self._degrees = np.asarray(graph.degrees)
+        return graph
+
+    def iterate(self, g, dist, updated_mask, count, *, record_degrees=False):
+        cap = bucket(count)
+        frontier = compact_mask(updated_mask, cap)
+        stats = _frontier_stats(g, frontier, count, record_degrees)
+        total = int(self._degrees[np.asarray(updated_mask)].sum())
+        cursor = jnp.zeros((cap,), jnp.int32)
+        dist, new_mask = wd_relax(g, dist, frontier, cursor,
+                                  cap_work=bucket(total),
+                                  use_pallas=self.use_pallas)
+        stats.edges_processed = total
+        return dist, new_mask, stats
+
+
+class NodeSplitting(StrategyBase):
+    name = "NS"
+
+    def __init__(self, histogram_bins: int = 10, mdt: Optional[int] = None):
+        self.histogram_bins = histogram_bins
+        self.mdt = mdt
+        self.split_info: Optional[node_split.SplitGraph] = None
+
+    def setup(self, graph: CSRGraph):
+        degrees = np.asarray(graph.degrees)
+        mdt = self.mdt or node_split.find_mdt(degrees, self.histogram_bins)
+        self.split_info = node_split.split_graph(graph, mdt)
+        return self.split_info
+
+    def iterate(self, sg, dist, updated_mask, count, *, record_degrees=False):
+        g2 = sg.graph
+        # mirror parent dist onto children + co-activate children
+        dist, mask2 = ns_activate(dist, updated_mask, sg.child_parent)
+        count2 = int(jnp.sum(mask2))
+        cap = bucket(count2)
+        frontier = compact_mask(mask2, cap)
+        stats = _frontier_stats(g2, frontier, count2, record_degrees)
+        dist, new_mask = bs_relax(g2, dist, frontier, cap=cap)
+        return dist, new_mask, stats
+
+    def state_bytes(self, sg):
+        return sg.graph.device_bytes() + sg.child_parent.size * 4
+
+
+class HierarchicalProcessing(StrategyBase):
+    name = "HP"
+
+    def __init__(self, histogram_bins: int = 10, mdt: Optional[int] = None,
+                 switch_threshold: int = 1024):
+        self.histogram_bins = histogram_bins
+        self.mdt = mdt
+        self.switch_threshold = switch_threshold
+
+    def setup(self, graph: CSRGraph):
+        degrees = np.asarray(graph.degrees)
+        self._degrees = degrees
+        self.mdt_value = self.mdt or node_split.find_mdt(
+            degrees, self.histogram_bins)
+        self._wd = WorkloadDecomposition()
+        self._wd.setup(graph)
+        return graph
+
+    def iterate(self, g, dist, updated_mask, count, *, record_degrees=False):
+        cap = bucket(count)
+        frontier = compact_mask(updated_mask, cap)
+        stats = _frontier_stats(g, frontier, count, record_degrees)
+        acc_mask = jnp.zeros((dist.shape[0],), jnp.bool_)
+        mdt = self.mdt_value
+
+        # Hybrid: small super list -> straight WD (paper §III-C)
+        if count <= self.switch_threshold:
+            dist, new_mask, sub_stats = self._wd.iterate(
+                g, dist, updated_mask, count)
+            stats.edges_processed = sub_stats.edges_processed
+            return dist, new_mask, stats
+
+        sub, cursor = frontier, jnp.zeros((cap,), jnp.int32)
+        live = count
+        subiters = 0
+        while live > self.switch_threshold:
+            dist, upd, cursor, alive = hp_sub_relax(
+                g, dist, sub, cursor, cap=sub.shape[0], mdt=mdt)
+            acc_mask = acc_mask | upd
+            live = int(jnp.sum(alive))
+            subiters += 1
+            if live:
+                cap2 = bucket(live)
+                sub, cursor = compact_pair(sub, cursor, alive, cap_out=cap2)
+        if live > 0:
+            # finish the small sublist with cursor-aware WD
+            mask = sub >= 0
+            rem = np.asarray(
+                jnp.where(mask, g.row_ptr[jnp.where(mask, sub, 0) + 1]
+                          - g.row_ptr[jnp.where(mask, sub, 0)] - cursor, 0))
+            total = int(np.maximum(rem, 0).sum())
+            if total > 0:
+                dist, upd = wd_relax(g, dist, sub, cursor,
+                                     cap_work=bucket(total))
+                acc_mask = acc_mask | upd
+            subiters += 1
+        stats.sub_iterations = subiters
+        return dist, acc_mask, stats
+
+
+def _frontier_stats(g, frontier, count, record_degrees) -> IterStats:
+    stats = IterStats(frontier_size=int(count), edges_processed=0)
+    if record_degrees:
+        f = np.asarray(frontier)
+        f = f[f >= 0]
+        row_ptr = np.asarray(g.row_ptr)
+        stats.frontier_degrees = row_ptr[f + 1] - row_ptr[f]
+        stats.edges_processed = int(stats.frontier_degrees.sum())
+    return stats
+
+
+STRATEGIES = {
+    "BS": NodeBased,
+    "EP": EdgeBased,
+    "WD": WorkloadDecomposition,
+    "NS": NodeSplitting,
+    "HP": HierarchicalProcessing,
+}

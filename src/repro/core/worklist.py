@@ -1,0 +1,69 @@
+"""Data-driven worklist machinery.
+
+GPU worklists are append-buffers fed by atomics.  JAX arrays are statically
+shaped, so a worklist here is a fixed-capacity index array + a valid count,
+and a "push" is a flag→scan→compact pipeline (the deterministic TPU analogue
+of Merrill-style queue management the paper builds on).
+
+Capacity *bucketing*: drivers round the live size up to the next power of two
+and dispatch to a per-capacity jitted specialization.  This keeps wall-clock
+work proportional to the live frontier (as on the GPU, where the launch
+configuration tracks the worklist size) while staying shape-static inside
+each call — and it bounds the number of compiled variants to O(log N).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+MIN_BUCKET = 256
+
+
+def bucket(n: int, minimum: int = MIN_BUCKET) -> int:
+    """Round up to the next power of two (≥ minimum)."""
+    n = max(int(n), minimum)
+    return 1 << (n - 1).bit_length()
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def compact_mask(mask: jax.Array, cap: int) -> jax.Array:
+    """Boolean mask [N] -> index worklist [cap] (padded with -1).
+
+    Worklists built this way are inherently deduplicated — the paper's
+    "worklist condensing" happens by construction in the chunked path."""
+    (idx,) = jnp.nonzero(mask, size=cap, fill_value=-1)
+    return idx.astype(jnp.int32)
+
+
+@jax.jit
+def mask_count(mask: jax.Array) -> jax.Array:
+    return jnp.sum(mask, dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def run_fill(starts: jax.Array, lengths: jax.Array, total_hint: jax.Array,
+             cap: int) -> tuple[jax.Array, jax.Array]:
+    """Vectorized variable-length run fill (the work-chunked push).
+
+    Given per-source ``starts`` (base offset of each source's run, e.g.
+    ``row_ptr[node]``) and run ``lengths``, produce the concatenation
+    ``[starts[0]..starts[0]+len0) ++ [starts[1]..) ++ ...`` padded to ``cap``.
+
+    This reserves ONE output range per source — the array equivalent of the
+    paper's single-atomic-per-node work chunking (§IV-D).  Returns
+    ``(values [cap], valid mask [cap])``.
+    """
+    lengths = lengths.astype(jnp.int32)
+    prefix = jnp.cumsum(lengths)                      # inclusive
+    exclusive = prefix - lengths
+    k = jnp.arange(cap, dtype=jnp.int32)
+    # which run does output slot k belong to?  (merge-path / searchsorted)
+    run = jnp.searchsorted(prefix, k, side="right").astype(jnp.int32)
+    run_c = jnp.clip(run, 0, lengths.shape[0] - 1)
+    local = k - exclusive[run_c]
+    vals = starts[run_c] + local
+    valid = k < jnp.minimum(total_hint, prefix[-1] if prefix.size else 0)
+    return jnp.where(valid, vals, -1).astype(jnp.int32), valid

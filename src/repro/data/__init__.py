@@ -1,0 +1,5 @@
+from repro.data.graphs import (  # noqa: F401
+    rmat_graph, erdos_renyi_graph, road_grid_graph, graph500_graph,
+    GRAPH_SUITE, make_graph,
+)
+from repro.data.pipeline import TokenPipeline, PipelineState  # noqa: F401

@@ -1,0 +1,94 @@
+"""Pallas kernel: causal GQA flash attention (forward).
+
+Grid (B, Hq, nq): each step owns one q tile [bq, hd] in VMEM and streams
+the K/V of its KV head group through VMEM-resident slices, maintaining the
+online-softmax running (max, denom, acc) in registers/VMEM — the standard
+TPU mapping of FlashAttention (HBM→VMEM block streaming instead of SRAM
+tiles; MXU does the [bq,hd]×[hd,bk] and [bq,bk]×[bk,hd] products).
+
+BlockSpec layout:
+  q:   (1, 1, bq, hd)    indexed (b, h, qi)
+  k,v: (1, 1, Sk, hd)    indexed (b, h//G)    — full KV row per head group
+  out: (1, 1, bq, hd)
+
+The whole-KV-in-VMEM block keeps the kernel simple (fits ≤ 2k tokens at
+hd=128 in 16 MB VMEM); production shapes stream K/V via a 4th grid dim and
+scratch accumulators — same math, same oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, scale: float,
+            causal: bool, bq: int):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0] * scale                      # [bq, hd]
+    Sk = k_ref.shape[2]
+    nk = Sk // bk
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.dslice(ki * bk, bk)]          # [bk, hd]
+        v = v_ref[0, 0, pl.dslice(ki * bk, bk)]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # [bq, bk]
+        if causal:
+            k_pos = ki * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_new = acc * corr[:, None] + pv
+        return m_new, l_new, acc_new
+
+    hd = q_ref.shape[3]
+    init = (jnp.full((bq,), NEG_INF, jnp.float32),
+            jnp.zeros((bq,), jnp.float32),
+            jnp.zeros((bq, hd), jnp.float32))
+    m, l, acc = jax.lax.fori_loop(0, nk, body, init)
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q [B,Hq,Sq,hd]; k,v [B,Hkv,Sk,hd]; Hq = G·Hkv.  Returns [B,Hq,Sq,hd].
+    Sq must be divisible by block_q and Sk by block_k (pad upstream)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    scale = hd ** -0.5
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    grid = (B, Hq, Sq // bq)
+    return pl.pallas_call(
+        functools.partial(_kernel, bk=bk, scale=scale, causal=causal, bq=bq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, Sk, hd), lambda b, h, qi, G=G: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, Sk, hd), lambda b, h, qi, G=G: (b, h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,45 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op auto-selects interpret mode on CPU (the kernels target TPU; the
+container validates them in interpret mode) and handles padding to the
+kernels' tile constraints.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.find_offsets import find_offsets as _find_offsets
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.ssd_chunk import ssd_chunk_dual as _ssd_chunk
+
+
+def wd_find_offsets(prefix: jax.Array, cap_work: int) -> jax.Array:
+    """WD merge-path offsets (paper Fig. 4 `find_offsets`)."""
+    return _find_offsets(prefix, cap_work)
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+              block_k: int = 128):
+    """Flash attention with automatic seq padding to the block size."""
+    B, Hq, Sq, hd = q.shape
+    Sk = k.shape[2]
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        # pad K with +inf-free zeros; mask handled by causal structure for
+        # pure-causal use; non-causal callers must pre-mask
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = _flash(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    return out[:, :, :Sq]
+
+
+def ssd_chunk(xbar, cum, Bm, Cm):
+    return _ssd_chunk(xbar, cum, Bm, Cm)

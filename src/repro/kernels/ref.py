@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every kernel (the ground truth the Pallas
+implementations are swept against in tests/test_kernels.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def find_offsets_ref(prefix: jax.Array, cap_work: int) -> jax.Array:
+    k = jnp.arange(cap_work, dtype=jnp.int32)
+    return jnp.searchsorted(prefix, k, side="right").astype(jnp.int32)
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """Naive softmax attention with GQA head grouping."""
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Sk, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    s = s * hd ** -0.5
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, hd).astype(q.dtype)
+
+
+def ssd_chunk_ref(xbar, cum, Bm, Cm):
+    """One-chunk SSD dual form (matches kernels.ssd_chunk signature)."""
+    xb = xbar.astype(jnp.float32)
+    cum = cum.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    c = xb.shape[1]
+    seg = cum[:, :, None, :] - cum[:, None, :, :]          # [BN,i,j,H]
+    ii = jnp.arange(c)
+    L = jnp.where((ii[:, None] >= ii[None, :])[None, :, :, None],
+                  jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bis,bjs->bij", Cm, Bm)
+    y = jnp.einsum("bij,bijh,bjhp->bihp", CB, L, xb)
+    decay_end = jnp.exp(cum[:, -1:, :] - cum)              # [BN,c,H]
+    st = jnp.einsum("bjs,bjh,bjhp->bhsp", Bm, decay_end, xb)
+    return y, st

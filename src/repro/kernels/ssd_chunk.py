@@ -1,0 +1,81 @@
+"""Pallas kernel: Mamba-2 SSD intra-chunk dual form.
+
+For one (batch, chunk, head) cell, given the chunk's discretized inputs
+x̄ [c,P], decay log-cumsum ``cum`` [c], and shared B/C projections [c,N],
+computes the two quantities the chunked SSD algorithm needs:
+
+  y_intra[i]  = Σ_{j≤i} (C_i·B_j) · exp(cum_i − cum_j) · x̄_j     [c,P]
+  state       = Σ_j exp(cum_c − cum_j) · B_j ⊗ x̄_j               [N,P]
+
+Everything is dense [c,c]/[c,N]/[c,P] matmuls — MXU-shaped by
+construction (c=256, N=128, P=64 are hardware-aligned), which is why SSD
+is the right TPU formulation of Mamba (DESIGN.md §2).  The inter-chunk
+recurrence (a small scan over chunk states) stays in XLA.
+
+Grid (B·nc, H); per-cell VMEM ≈ c·(2N+2P+c)·4B ≈ 0.9 MB at defaults.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xb_ref, cum_ref, b_ref, c_ref, y_ref, st_ref):
+    xb = xb_ref[0, :, 0, :].astype(jnp.float32)          # [c,P]
+    cum = cum_ref[0, :, 0].astype(jnp.float32)           # [c]
+    Bm = b_ref[0].astype(jnp.float32)                    # [c,N]
+    Cm = c_ref[0].astype(jnp.float32)                    # [c,N]
+    c = xb.shape[0]
+    # decay matrix L[i,j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)           # [c,c]
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [c,c]
+    M = CB * L
+    y = jax.lax.dot_general(M, xb, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [c,P]
+    # chunk state: Bᵀ · diag(exp(cum_last - cum)) · x̄  -> [N,P]
+    decay_end = jnp.exp(cum[-1] - cum)                   # [c]
+    st = jax.lax.dot_general(Bm * decay_end[:, None], xb,
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [N,P]
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_dual(xbar, cum, Bm, Cm, interpret: bool | None = None):
+    """xbar [BN,c,H,P]; cum [BN,c,H]; Bm/Cm [BN,c,N] where BN = B·n_chunks.
+
+    Returns (y_intra [BN,c,H,P], states [BN,H,N,P])."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    BN, c, H, P = xbar.shape
+    N = Bm.shape[-1]
+    grid = (BN, H)
+    y, st = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, c, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, c, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, c, N), lambda b, h: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BN, c, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((BN, H, N, P), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xbar, cum, Bm, Cm)
+    return y, st

@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks the device count on first
+# init).  512 placeholder host devices back the production meshes:
+# 16×16 (single pod) and 2×16×16 (two pods).
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+import numpy as np     # noqa: E402
+
+from repro.configs import ARCHITECTURES, get_config, normalize  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_chip_count  # noqa: E402
+from repro.launch.shapes import SHAPES, skip_reason  # noqa: E402
+from repro.launch.steps import build_step  # noqa: E402
+from repro.models.params import param_count  # noqa: E402
+from repro.models.model import LanguageModel  # noqa: E402
+from repro.roofline.analysis import (  # noqa: E402
+    collective_bytes_from_hlo, model_flops_for, roofline_terms)
+
+
+def _compile_cfg(cfg, shape, mesh):
+    built = build_step(cfg, shape, mesh)
+    lowered = jax.jit(
+        built.fn,
+        in_shardings=built.in_shardings,
+        out_shardings=built.out_shardings,
+        donate_argnums=built.donate_argnums,
+    ).lower(*built.args_abstract)
+    return lowered, lowered.compile()
+
+
+def _cost_triplet(compiled):
+    """(flops, bytes, collective-bytes) per device for one compile."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "experiments/dryrun",
+             config_overrides: dict | None = None,
+             save_hlo: bool = False) -> dict:
+    """Lower + compile one (arch × shape × mesh) cell; return the record."""
+    cfg = get_config(arch)
+    if config_overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **config_overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind}
+
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(
+                out_dir, f"{normalize(arch)}__{shape_name}__{mesh_name}"
+                ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chip_count(mesh)
+    t0 = time.perf_counter()
+    from repro.moe.sharded import use_mesh
+    with mesh, use_mesh(mesh):
+        lowered, compiled = _compile_cfg(cfg, shape, mesh)
+        t_lower = 0.0
+        t_compile = time.perf_counter() - t0
+
+        # XLA's HloCostAnalysis counts while/scan bodies ONCE, not ×trip —
+        # so FLOPs/bytes/collectives of the layer scan are under-reported.
+        # Correction: compile depth-reduced variants with n_repeats ∈ {1,2}
+        # and extrapolate the per-period delta to the full depth.
+        import dataclasses as _dc
+        model_full = LanguageModel(cfg)
+        R = model_full.n_repeats
+        flops, bytes_accessed, coll_full = _cost_triplet(compiled)
+        if R > 1:
+            base_layers = model_full.prefix_len + model_full.period
+            unroll_opts = dict(scan_impl="unroll", attn_block_q=2048,
+                               attn_block_k=2048)
+            cfg1 = _dc.replace(cfg, num_layers=base_layers, **unroll_opts)
+            cfg2 = _dc.replace(cfg, num_layers=base_layers
+                               + model_full.period, **unroll_opts)
+            _, c1 = _compile_cfg(cfg1, shape, mesh)
+            _, c2 = _compile_cfg(cfg2, shape, mesh)
+            f1, b1, k1 = _cost_triplet(c1)
+            f2, b2, k2 = _cost_triplet(c2)
+            flops = f1 + (f2 - f1) * (R - 1)
+            bytes_accessed = b1 + (b2 - b1) * (R - 1)
+            coll_full = {
+                "per_type": {k: k1["per_type"][k]
+                             + (k2["per_type"][k] - k1["per_type"][k])
+                             * (R - 1) for k in k1["per_type"]},
+                "counts": k1["counts"],
+                "total": k1["total"] + (k2["total"] - k1["total"]) * (R - 1),
+            }
+
+    mem_text, bytes_per_device = None, None
+    try:
+        ma = compiled.memory_analysis()
+        mem_text = str(ma)
+        bytes_per_device = (
+            getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            + getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "generated_code_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception as exc:                       # CPU backend gaps
+        mem_text = f"memory_analysis unavailable on host backend: {exc}"
+
+    hlo = compiled.as_text()
+    coll = coll_full
+
+    n_active = cfg.active_params()
+    mf = model_flops_for(cfg, shape.kind, shape.seq_len, shape.global_batch,
+                         n_active)
+    report = roofline_terms(
+        arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
+        per_device_flops=flops, per_device_bytes=bytes_accessed,
+        per_device_collective_bytes=coll["total"], model_flops=mf,
+        bytes_per_device=bytes_per_device, collective_detail=coll)
+
+    rec.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        per_device_flops=flops,
+        per_device_bytes=bytes_accessed,
+        collective_bytes_per_device=coll["total"],
+        collective_detail=coll,
+        bytes_per_device=bytes_per_device,
+        memory_analysis=mem_text,
+        model_flops=mf,
+        active_params=n_active,
+        roofline={
+            "compute_s": report.compute_s,
+            "memory_s": report.memory_s,
+            "collective_s": report.collective_s,
+            "dominant": report.dominant,
+            "useful_ratio": report.useful_ratio,
+        },
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if not config_overrides else "_opt"
+    path = os.path.join(
+        out_dir, f"{normalize(arch)}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    if save_hlo:
+        with open(path.replace(".json", ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ModelConfig overrides (perf iters)")
+    args = ap.parse_args()
+
+    archs = ARCHITECTURES if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    overrides = json.loads(args.override) if args.override else None
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                                   config_overrides=overrides,
+                                   save_hlo=args.save_hlo)
+                except Exception:
+                    failures += 1
+                    print(f"[FAIL] {tag}\n{traceback.format_exc()}")
+                    continue
+                if rec["status"] == "skipped":
+                    print(f"[skip] {tag}: {rec['reason']}")
+                else:
+                    r = rec["roofline"]
+                    print(f"[ ok ] {tag}: compile={rec['compile_s']}s "
+                          f"flops/dev={rec['per_device_flops']:.3e} "
+                          f"coll/dev={rec['collective_bytes_per_device']:.3e}B "
+                          f"dominant={r['dominant']} "
+                          f"useful={r['useful_ratio']:.2f} "
+                          f"mem/dev={_gb(rec['bytes_per_device'])}")
+    print(f"\ndry-run complete; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+def _gb(x):
+    if x is None:
+        return "n/a"
+    return f"{x/2**30:.2f}GiB"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization, and smoke tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 = 256 chips/pod; 2 pods = 512 chips when ``multi_pod``."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Whatever this host actually has — used by examples and tests."""
+    n = jax.device_count()
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+def data_axes(mesh: Mesh):
+    """The (composed) batch/FSDP axes for this mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def adapt_pspec(pspec: P, mesh: Mesh) -> P:
+    """Rewrite logical 'data' entries to the mesh's composed data axes
+    (multi-pod: 'data' → ('pod','data'))."""
+    if "pod" not in mesh.axis_names:
+        return pspec
+    def conv(entry):
+        if entry == ("data", "model"):
+            return entry          # EP grid marker: stays within one pod
+        if entry == "data":
+            return ("pod", "data")
+        if isinstance(entry, tuple):
+            return tuple(x for e in entry for x in
+                         (("pod", "data") if e == "data" else (e,)))
+        return entry
+    return P(*[conv(e) for e in pspec])
+
+
+def adapt_pspec_tree(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: adapt_pspec(s, mesh) if isinstance(s, P) else s, tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def mesh_chip_count(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

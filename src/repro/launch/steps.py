@@ -1,0 +1,211 @@
+"""Step builders: the jittable train / prefill / serve step per (arch ×
+shape), plus abstract ``input_specs`` (ShapeDtypeStruct stand-ins — the
+671B model is never allocated) and the matching NamedShardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import adapt_pspec, adapt_pspec_tree, data_axes
+from repro.launch.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.model import LanguageModel
+from repro.models.params import (ParamSpec, abstract_params, is_spec,
+                                 pspec_tree)
+from repro.optim.adamw import AdamW
+from repro.optim.schedules import warmup_cosine
+
+
+def make_optimizer(cfg: ModelConfig) -> AdamW:
+    return AdamW(learning_rate=warmup_cosine(3e-4, 2000, 100000),
+                 state_dtype=cfg.opt_state_dtype)
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                    # jittable python callable
+    args_abstract: tuple       # ShapeDtypeStruct pytrees, one per arg
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def _shardings_of(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, adapt_pspec(s.pspec, mesh)),
+        spec_tree, is_leaf=is_spec)
+
+
+def _abstract_of(spec_tree):
+    return abstract_params(spec_tree)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract training/prefill batch for this arch."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        tok = ParamSpec((B, S, cfg.num_codebooks), jnp.int32, P("data"))
+        lab = ParamSpec((B, S, cfg.num_codebooks), jnp.int32, P("data"))
+    else:
+        tok = ParamSpec((B, S), jnp.int32, P("data"))
+        lab = ParamSpec((B, S), jnp.int32, P("data"))
+    specs = {"tokens": tok, "labels": lab}
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = ParamSpec(
+            (B, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype),
+            P("data", None, None))
+    if shape.global_batch % 16 != 0:
+        # batch of 1 (long_500k): replicate batch, shard nothing here
+        specs = jax.tree_util.tree_map(
+            lambda s: ParamSpec(s.shape, s.dtype, P(), s.init),
+            specs, is_leaf=is_spec)
+    return specs
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                     ) -> BuiltStep:
+    model = LanguageModel(cfg)
+    opt = make_optimizer(cfg)
+    pspecs = model.param_specs()
+    sspecs = opt.state_specs(pspecs)
+    bspecs = batch_specs(cfg, shape)
+    state_abs = {"params": _abstract_of(pspecs), "opt": _abstract_of(sspecs)}
+    state_sh = {"params": _shardings_of(pspecs, mesh),
+                "opt": _shardings_of(sspecs, mesh)}
+    batch_abs = _abstract_of(bspecs)
+    batch_sh = _shardings_of(bspecs, mesh)
+
+    mb = max(cfg.microbatches, 1)
+
+    def train_step(state, batch):
+        if mb == 1:
+            grads, metrics = jax.grad(
+                lambda p: model.loss(p, batch), has_aux=True)(
+                state["params"])
+        else:
+            # gradient accumulation: activation residency ÷ mb (the
+            # memory-term lever for the giants, §Perf) at the cost of one
+            # extra grads-sized buffer and mb sequential passes
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(mb, b // mb, *x.shape[1:])
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_step(carry, mbatch):
+                g_acc, m_acc = carry
+                g, m = jax.grad(lambda p: model.loss(p, mbatch),
+                                has_aux=True)(state["params"])
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                m_acc = {k: m_acc[k] + jnp.float32(m[k]) / mb
+                         for k in m_acc}
+                return (g_acc, m_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            probe_metrics = jax.eval_shape(
+                lambda p: model.loss(p, jax.tree_util.tree_map(
+                    lambda x: x[0], micro))[1], state["params"])
+            m0 = {k: jnp.float32(0) for k in probe_metrics}
+            if cfg.scan_impl == "unroll":     # scan-free cost variants
+                from repro.models.layers import scan_or_unroll
+                (grads, metrics), _ = scan_or_unroll(
+                    lambda c, i: acc_step(
+                        c, jax.tree_util.tree_map(lambda x: x[i], micro)),
+                    (zeros, m0), mb, True)
+            else:
+                (grads, metrics), _ = jax.lax.scan(acc_step, (zeros, m0),
+                                                   micro)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+        new_params, new_opt, opt_metrics = opt.update(
+            grads, state["opt"], state["params"])
+        metrics.update(opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return BuiltStep(
+        fn=train_step,
+        args_abstract=(state_abs, batch_abs),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                       ) -> BuiltStep:
+    """Inference prefill: forward + KV-cache write for the whole batch."""
+    model = LanguageModel(cfg)
+    pspecs = model.param_specs()
+    B, S = shape.global_batch, shape.seq_len
+    cspecs = model.cache_specs(B, S)
+    bspecs = batch_specs(cfg, shape)
+    bspecs.pop("labels")
+
+    def prefill_step(params, batch, cache):
+        logits, cache, _ = model.forward(params, batch, mode="prefill",
+                                         cache=cache)
+        # greedy next token for each sequence (the serving handoff)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1)
+        return next_tok, cache
+
+    cache_sh = _shardings_of(cspecs, mesh)
+    return BuiltStep(
+        fn=prefill_step,
+        args_abstract=(_abstract_of(pspecs), _abstract_of(bspecs),
+                       _abstract_of(cspecs)),
+        in_shardings=(_shardings_of(pspecs, mesh),
+                      _shardings_of(bspecs, mesh), cache_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,),
+    )
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                     ) -> BuiltStep:
+    """One decode step: new token against a seq_len KV cache."""
+    model = LanguageModel(cfg)
+    pspecs = model.param_specs()
+    B, S = shape.global_batch, shape.seq_len
+    # long-context single-sequence decode: shard the cache over sequence
+    seq_axis = "data" if B % 16 != 0 else None
+    cspecs = model.cache_specs(B, S, seq_axis=seq_axis)
+    if cfg.family == "audio":
+        tok = ParamSpec((B, 1, cfg.num_codebooks), jnp.int32,
+                        P("data" if B % 16 == 0 else None))
+    else:
+        tok = ParamSpec((B, 1), jnp.int32,
+                        P("data" if B % 16 == 0 else None))
+    pos = ParamSpec((), jnp.int32, P())
+
+    def serve_step(params, cache, tokens, position):
+        logits, cache = model.decode_step(params, cache, tokens, position)
+        next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok, cache
+
+    cache_sh = _shardings_of(cspecs, mesh)
+    return BuiltStep(
+        fn=serve_step,
+        args_abstract=(_abstract_of(pspecs), _abstract_of(cspecs),
+                       _abstract_of({"t": tok})["t"],
+                       _abstract_of({"p": pos})["p"]),
+        in_shardings=(_shardings_of(pspecs, mesh), cache_sh,
+                      _shardings_of({"t": tok}, mesh)["t"],
+                      _shardings_of({"p": pos}, mesh)["p"]),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    )
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh)
+    return build_serve_step(cfg, shape, mesh)

@@ -1,0 +1,386 @@
+"""Attention variants across the assigned pool:
+
+* GQA (+RoPE) — llama-arch (deepseek-7b, starcoder2, qwen*, musicgen, jamba)
+  with optional QKV bias (qwen1.5) and per-head qk RMSNorm (qwen3).
+* MLA — deepseek-v3 multi-head latent attention, faithful low-rank Q/KV with
+  decoupled RoPE; decode path uses **weight absorption** so the cache stays
+  compressed ([c_kv; k_rope] = 576 floats/token, head-shared).
+* Cross-attention — llama-3.2-vision image layers (gated, non-causal).
+
+Each variant provides ``*_specs`` (ParamSpec tree), ``*_forward`` (full
+sequence, used by train and prefill; writes the cache when given one) and
+``*_decode`` (single position against the cache).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_rope, blocked_attention, decode_attention, rmsnorm, rmsnorm_specs)
+from repro.models.params import ParamSpec, shard_if
+
+
+
+def _attn_opts(cfg: ModelConfig) -> dict:
+    return {"block_q": cfg.attn_block_q, "block_k": cfg.attn_block_k,
+            "unroll": cfg.scan_impl == "unroll"}
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ===========================================================================
+# GQA
+# ===========================================================================
+
+def head_layout(cfg: ModelConfig):
+    """Head padding/regrouping plan (cfg.pad_heads).
+
+    Returns (hq_p, hkv_p, r, G_p) — or None when inapplicable/unneeded.
+    KV heads are replicated r = 16/hkv times (tied at runtime, not as
+    parameters); Q heads are regrouped so each replica serves a
+    contiguous sub-group of G_p = ⌈G/r⌉ (ragged last sub-group padded).
+    granite (24H/8kv): 32 Q slots over 16 kv — waste 1.33× vs 16×
+    replication; starcoder2 (48H/4kv): pure permutation, zero waste."""
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    if not cfg.pad_heads or hkv == 0:
+        return None
+    if hq % 16 == 0 and hkv % 16 == 0:
+        return None                      # already shardable
+    if hkv >= 16 or 16 % hkv != 0:
+        return None                      # e.g. qwen1.5 kv=20: no clean plan
+    r = 16 // hkv
+    G = hq // hkv
+    G_p = -(-G // r)
+    return (16 * G_p, 16, r, G_p)
+
+
+def q_head_map(cfg: ModelConfig):
+    """For each padded Q slot, the real Q head index or -1 (pad).
+
+    Slot layout: kv' = j*r + t (replica t of real kv j); slot (kv', s)
+    with s < G_p maps to real q = j*G + t*G_p + s when in range."""
+    lay = head_layout(cfg)
+    assert lay is not None
+    hq_p, hkv_p, r, G_p = lay
+    G = cfg.num_heads // cfg.num_kv_heads
+    out = []
+    for kvp in range(hkv_p):
+        j, t = kvp // r, kvp % r
+        for s in range(G_p):
+            g = t * G_p + s
+            out.append(j * G + g if g < G else -1)
+    return out
+
+
+def gqa_specs(cfg: ModelConfig, fsdp: Optional[str] = None) -> dict:
+    d, hq, hkv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                      cfg.resolved_head_dim)
+    lay = head_layout(cfg)
+    if lay is not None:
+        hq_p = lay[0]
+        dt = _dt(cfg)
+        specs = {
+            "wq": ParamSpec((d, hq_p, hd), dt, P(fsdp, "model", None),
+                            "scaled"),
+            "wk": ParamSpec((d, hkv, hd), dt, P(fsdp, None, None), "scaled"),
+            "wv": ParamSpec((d, hkv, hd), dt, P(fsdp, None, None), "scaled"),
+            "wo": ParamSpec((hq_p, hd, d), dt, P("model", None, fsdp),
+                            "scaled"),
+        }
+        if cfg.qkv_bias:
+            specs["bq"] = ParamSpec((hq_p, hd), dt, P("model", None), "zeros")
+            specs["bk"] = ParamSpec((hkv, hd), dt, P(), "zeros")
+            specs["bv"] = ParamSpec((hkv, hd), dt, P(), "zeros")
+        if cfg.qk_norm:
+            specs["q_norm"] = rmsnorm_specs(hd)
+            specs["k_norm"] = rmsnorm_specs(hd)
+        return specs
+    tp_q = shard_if(hq, "model", 16)
+    tp_kv = shard_if(hkv, "model", 16)
+    dt = _dt(cfg)
+    specs = {
+        "wq": ParamSpec((d, hq, hd), dt, P(fsdp, tp_q, None), "scaled"),
+        "wk": ParamSpec((d, hkv, hd), dt, P(fsdp, tp_kv, None), "scaled"),
+        "wv": ParamSpec((d, hkv, hd), dt, P(fsdp, tp_kv, None), "scaled"),
+        "wo": ParamSpec((hq, hd, d), dt, P(tp_q, None, fsdp), "scaled"),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((hq, hd), dt, P(tp_q, None), "zeros")
+        specs["bk"] = ParamSpec((hkv, hd), dt, P(tp_kv, None), "zeros")
+        specs["bv"] = ParamSpec((hkv, hd), dt, P(tp_kv, None), "zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = rmsnorm_specs(hd)
+        specs["k_norm"] = rmsnorm_specs(hd)
+    return specs
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"][None, :, None, :]
+        k = k + params["bk"][None, :, None, :]
+        v = v + params["bv"][None, :, None, :]
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    lay = head_layout(cfg)
+    if lay is not None:
+        # replicate the (tied) KV heads to the padded layout
+        r = lay[2]
+        k = jnp.repeat(k, r, axis=1)
+        v = jnp.repeat(v, r, axis=1)
+    q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    return q, k, v
+
+
+def _q_mask(cfg: ModelConfig, dtype):
+    """[hq_p] 1/0 mask zeroing padded Q slots (exact semantics: pad slots
+    contribute nothing and receive no gradient)."""
+    lay = head_layout(cfg)
+    if lay is None:
+        return None
+    import numpy as np
+    m = np.array([1.0 if h >= 0 else 0.0 for h in q_head_map(cfg)])
+    return jnp.asarray(m, dtype)[None, :, None, None]
+
+
+def gqa_forward(params, cfg: ModelConfig, x, positions, cache=None):
+    """x [B,S,D].  Returns (out [B,S,D], new_cache).
+
+    When ``cache`` (a preallocated {k,v,length} buffer of capacity max_len)
+    is given, this is the *prefill* path: K/V are written at offset 0 and
+    the buffer is returned for subsequent ``gqa_decode`` calls."""
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if cache is not None:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=2)
+        cache = {"k": kc, "v": vc,
+                 "length": jnp.asarray(x.shape[1], jnp.int32)}
+    out = blocked_attention(q, k, v, causal=True, **_attn_opts(cfg))
+    qm = _q_mask(cfg, out.dtype)
+    if qm is not None:
+        out = out * qm
+    out = jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+    return out, cache
+
+
+def gqa_decode(params, cfg: ModelConfig, x, position, cache):
+    """x [B,1,D]; cache {k,v: [B,Hkv,S,hd], length} — in-place KV append.
+
+    ``position`` is a scalar (lockstep batch: the dry-run serve_step) or a
+    per-sequence [B] vector (continuous batching with ragged slots)."""
+    B = x.shape[0]
+    position = jnp.asarray(position, jnp.int32)
+    pos_b = jnp.broadcast_to(position, (B,))
+    q, k, v = _project_qkv(params, cfg, x, pos_b[:, None])
+    if position.ndim == 0:                      # lockstep fast path
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, position,
+                                                 axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, position,
+                                                 axis=2)
+    else:                                        # per-slot scatter
+        hkv = k.shape[1]
+        bi = jnp.arange(B)[:, None]
+        hi = jnp.arange(hkv)[None, :]
+        kc = cache["k"].at[bi, hi, pos_b[:, None]].set(k[:, :, 0])
+        vc = cache["v"].at[bi, hi, pos_b[:, None]].set(v[:, :, 0])
+    out = decode_attention(q, kc, vc, pos_b + 1)
+    qm = _q_mask(cfg, out.dtype)
+    if qm is not None:
+        out = out * qm
+    out = jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+    return out, {"k": kc, "v": vc, "length": jnp.max(pos_b) + 1}
+
+
+def gqa_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                    seq_axis=None) -> dict:
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    lay = head_layout(cfg)
+    if lay is not None:
+        hkv = lay[1]
+    tp_kv = shard_if(hkv, "model", 16)
+    dt = _dt(cfg)
+    kv = ParamSpec((batch, hkv, max_len, hd), dt,
+                   P("data" if batch % 16 == 0 else None, tp_kv,
+                     seq_axis, None), "zeros")
+    return {"k": kv, "v": kv,
+            "length": ParamSpec((), jnp.int32, P(), "zeros")}
+
+
+# ===========================================================================
+# MLA (deepseek-v3)
+# ===========================================================================
+
+def mla_specs(cfg: ModelConfig, fsdp: Optional[str] = None) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    tp_h = shard_if(h, "model", 16)
+    dt = _dt(cfg)
+    return {
+        "wq_a": ParamSpec((d, qr), dt, P(fsdp, shard_if(qr, "model", 16)),
+                          "scaled"),
+        "q_norm": rmsnorm_specs(qr),
+        "wq_b": ParamSpec((qr, h, dn + dr), dt, P(fsdp, tp_h, None), "scaled"),
+        "wkv_a": ParamSpec((d, kvr + dr), dt, P(fsdp, None), "scaled"),
+        "kv_norm": rmsnorm_specs(kvr),
+        "wk_b": ParamSpec((kvr, h, dn), dt, P(fsdp, tp_h, None), "scaled"),
+        "wv_b": ParamSpec((kvr, h, dv), dt, P(fsdp, tp_h, None), "scaled"),
+        "wo": ParamSpec((h, dv, d), dt, P(tp_h, None, fsdp), "scaled"),
+    }
+
+
+def _mla_latents(params, cfg: ModelConfig, x, positions):
+    """Shared low-rank path: query heads + compressed KV latent."""
+    dr, kvr = cfg.qk_rope_head_dim, cfg.kv_lora_rank
+    q_lat = rmsnorm(params["q_norm"], x @ params["wq_a"])
+    q = jnp.einsum("bsr,rhk->bhsk", q_lat, params["wq_b"])
+    q_nope, q_rope = q[..., : cfg.qk_nope_head_dim], q[..., cfg.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)
+    kv = x @ params["wkv_a"]                               # [B,S,kvr+dr]
+    c_kv = rmsnorm(params["kv_norm"], kv[..., :kvr])
+    k_rope = apply_rope(kv[..., None, :, kvr:], positions[:, None, :],
+                        cfg.rope_theta)                    # [B,1,S,dr]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(params, cfg: ModelConfig, x, positions, cache=None):
+    h = cfg.num_heads
+    dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_latents(params, cfg, x, positions)
+    # prefill/train: expand compressed latent to per-head K/V
+    k_nope = jnp.einsum("bsr,rhk->bhsk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsr,rhk->bhsk", c_kv, params["wv_b"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:3],
+                                           cfg.qk_rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (dn + cfg.qk_rope_head_dim) ** -0.5
+    out = blocked_attention(q, k, v, causal=True, scale=scale,
+                            **_attn_opts(cfg))
+    out = jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+    if cache is not None:
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv, 0, axis=1)
+        krope_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[:, 0], 0, axis=1)
+        cache = {"c_kv": ckv_c, "k_rope": krope_c,
+                 "length": jnp.asarray(x.shape[1], jnp.int32)}
+    return out, cache
+
+
+def mla_decode(params, cfg: ModelConfig, x, position, cache):
+    """Weight-absorbed MQA-style decode over the compressed cache.
+
+    score = q_nope·(c_kv W_kb) + q_rope·k_rope
+          = (q_nope W_kb^T)·c_kv + q_rope·k_rope   — absorb W_kb into q
+    out   = (p·c_kv) W_vb                           — absorb W_vb into o
+    """
+    dn, dr, dv = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim)
+    B = x.shape[0]
+    position = jnp.asarray(position, jnp.int32)
+    pos_b = jnp.broadcast_to(position, (B,))
+    q_nope, q_rope, c_kv, k_rope = _mla_latents(params, cfg, x,
+                                                pos_b[:, None])
+    if position.ndim == 0:                      # lockstep fast path
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv, position, axis=1)           # [B,S,kvr]
+        krope_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[:, 0], position, axis=1)  # [B,S,dr]
+    else:                                        # per-slot scatter
+        bi = jnp.arange(B)
+        ckv_c = cache["c_kv"].at[bi, pos_b].set(c_kv[:, 0])
+        krope_c = cache["k_rope"].at[bi, pos_b].set(k_rope[:, 0, 0])
+    q_abs = jnp.einsum("bhsk,rhk->bhsr", q_nope, params["wk_b"])
+    scale = (dn + dr) ** -0.5
+    s = (jnp.einsum("bhsr,btr->bhst", q_abs, ckv_c)
+         + jnp.einsum("bhsk,btk->bhst", q_rope, krope_c)) * scale
+    s = s.astype(jnp.float32)
+    mask = (jnp.arange(ckv_c.shape[1])[None, None, None, :]
+            <= pos_b[:, None, None, None])
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o_c = jnp.einsum("bhst,btr->bhsr", p, ckv_c)           # [B,h,1,kvr]
+    out = jnp.einsum("bhsr,rhk->bhsk", o_c, params["wv_b"])
+    out = jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+    return out, {"c_kv": ckv_c, "k_rope": krope_c,
+                 "length": jnp.max(pos_b) + 1}
+
+
+def mla_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                    seq_axis=None) -> dict:
+    dt = _dt(cfg)
+    b_ax = "data" if batch % 16 == 0 else None
+    return {
+        "c_kv": ParamSpec((batch, max_len, cfg.kv_lora_rank), dt,
+                          P(b_ax, seq_axis, None), "zeros"),
+        "k_rope": ParamSpec((batch, max_len, cfg.qk_rope_head_dim), dt,
+                            P(b_ax, seq_axis, None), "zeros"),
+        "length": ParamSpec((), jnp.int32, P(), "zeros"),
+    }
+
+
+# ===========================================================================
+# Cross-attention (llama-3.2-vision image layers)
+# ===========================================================================
+
+def cross_attn_specs(cfg: ModelConfig, fsdp: Optional[str] = None) -> dict:
+    d, hq, hkv, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                      cfg.resolved_head_dim)
+    tp_q, tp_kv = shard_if(hq, "model", 16), shard_if(hkv, "model", 16)
+    dt = _dt(cfg)
+    return {
+        "wq": ParamSpec((d, hq, hd), dt, P(fsdp, tp_q, None), "scaled"),
+        "wk": ParamSpec((d, hkv, hd), dt, P(fsdp, tp_kv, None), "scaled"),
+        "wv": ParamSpec((d, hkv, hd), dt, P(fsdp, tp_kv, None), "scaled"),
+        "wo": ParamSpec((hq, hd, d), dt, P(tp_q, None, fsdp), "scaled"),
+        "q_norm": rmsnorm_specs(hd),
+        "k_norm": rmsnorm_specs(hd),
+        "gate": ParamSpec((), jnp.float32, P(), "zeros"),
+    }
+
+
+def cross_attn_forward(params, cfg: ModelConfig, x, vision_embeds,
+                       cache=None):
+    """x [B,S,D] text; vision_embeds [B,T,D] (stub frontend output)."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bhtk", vision_embeds, params["wk"])
+    v = jnp.einsum("btd,dhk->bhtk", vision_embeds, params["wv"])
+    q = rmsnorm(params["q_norm"], q)
+    k = rmsnorm(params["k_norm"], k)
+    out = blocked_attention(q, k, v, causal=False, **_attn_opts(cfg))
+    out = jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+    out = jnp.tanh(params["gate"]).astype(out.dtype) * out
+    if cache is not None:
+        cache = {"k": k, "v": v}
+    return out, cache
+
+
+def cross_attn_decode(params, cfg: ModelConfig, x, cache):
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    q = rmsnorm(params["q_norm"], q)
+    out = decode_attention(q, cache["k"], cache["v"],
+                           cache["k"].shape[2])
+    out = jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+    out = jnp.tanh(params["gate"]).astype(out.dtype) * out
+    return out, cache
+
+
+def cross_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    tp_kv = shard_if(hkv, "model", 16)
+    dt = _dt(cfg)
+    kv = ParamSpec((batch, hkv, cfg.num_image_tokens, hd), dt,
+                   P("data" if batch % 16 == 0 else None, tp_kv, None, None),
+                   "zeros")
+    return {"k": kv, "v": kv}

@@ -1,0 +1,191 @@
+"""Shared layer primitives: RMSNorm, RoPE, blocked online-softmax attention
+(the XLA 'flash' path — also the oracle for the Pallas kernel), SwiGLU.
+
+All layers are pure functions over explicit param dicts (pytrees of arrays);
+the matching ParamSpec trees live next to each ``*_specs`` function.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(dim: int) -> dict:
+    return {"scale": ParamSpec((dim,), jnp.float32, P(), "ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rope
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, hd]; positions [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blocked online-softmax attention (flash-style, pure XLA)
+# ---------------------------------------------------------------------------
+
+def scan_or_unroll(f, init, length: int, unroll: bool):
+    """lax.scan over jnp.arange(length), or a python loop when ``unroll``
+    (identical math; scan-free HLO for cost-accurate dry-run compiles)."""
+    if not unroll:
+        return jax.lax.scan(f, init, jnp.arange(length))
+    carry, ys = init, []
+    for i in range(length):
+        carry, y = f(carry, i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "scale",
+                                   "unroll"))
+def blocked_attention(q, k, v, *, causal: bool = True, q_offset=0,
+                      scale: Optional[float] = None,
+                      block_q: int = 512, block_k: int = 512,
+                      unroll: bool = False):
+    """GQA attention without materializing [Sq, Sk].
+
+    q [B, Hq, Sq, hd]; k, v [B, Hkv, Sk, hd] with Hq = Hkv * G.
+    Outer scan over q blocks, inner scan over k blocks with running
+    (max, denom, acc) — the TPU-friendly restructuring of FlashAttention
+    (VMEM-tile-sized working set instead of an O(S²) score matrix).
+    """
+    B, Hq, Sq, hd = q.shape
+    _, Hkv, Sk, hdv = v.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    nq, nk = -(-Sq // bq), -(-Sk // bk)
+    pad_q, pad_k = nq * bq - Sq, nk * bk - Sk
+    orig_Sq = Sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sqp, Skp = q.shape[2], k.shape[2]
+    qb = q.reshape(B, Hkv, G, nq, bq, hd).transpose(3, 0, 1, 2, 4, 5)
+    kb = k.reshape(B, Hkv, nk, bk, hd).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(B, Hkv, nk, bk, hdv).transpose(2, 0, 1, 3, 4)
+    kpos = (jnp.arange(Skp) - 0).reshape(nk, bk)
+    qpos = (jnp.arange(Sqp) + q_offset).reshape(nq, bq)
+    kvalid = (jnp.arange(Skp) < Sk).reshape(nk, bk)
+
+    def q_step(_, qi):
+        qblk = qb[qi] * scale                       # [B,Hkv,G,bq,hd]
+        qp = qpos[qi]
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk, kb[ki],
+                           preferred_element_type=jnp.float32)
+            mask = kvalid[ki][None, :]
+            if causal:
+                mask = mask & (qp[:, None] >= kpos[ki][None, :])
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vb[ki],
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, G, bq), jnp.float32),
+                jnp.zeros((B, Hkv, G, bq, hdv), jnp.float32))
+        (m, l, acc), _ = scan_or_unroll(k_step, init, nk, unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, blocks = scan_or_unroll(q_step, None, nq, unroll)  # [nq,B,Hkv,G,bq,hd]
+    out = blocks.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, Sqp, hdv)
+    return out[:, :, :orig_Sq]
+
+
+def decode_attention(q, k_cache, v_cache, length, *, scale=None):
+    """Single-position attention against a KV cache.
+
+    q [B, Hq, 1, hd]; caches [B, Hkv, S, hd]; length = #valid cache slots,
+    scalar or per-sequence [B] (continuous batching serves ragged slots).
+    """
+    B, Hq, _, hd = q.shape
+    _, Hkv, S, hdv = v_cache.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, Hkv, G, hd) * scale
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    length_b = jnp.broadcast_to(length, (B,))
+    mask = jnp.arange(S)[None, None, None, :] < length_b[:, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, 1, hdv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def ffn_specs(d_model: int, d_ff: int, *, activation: str, tp: str = "model",
+              fsdp: Optional[str] = None, dtype=jnp.bfloat16) -> dict:
+    from repro.models.params import shard_if
+    tp16 = shard_if(d_ff, tp, 16)
+    specs = {
+        "w_up": ParamSpec((d_model, d_ff), dtype, P(fsdp, tp16), "scaled"),
+        "w_down": ParamSpec((d_ff, d_model), dtype, P(tp16, fsdp), "scaled"),
+    }
+    if activation == "swiglu":
+        specs["w_gate"] = ParamSpec((d_model, d_ff), dtype,
+                                    P(fsdp, tp16), "scaled")
+    return specs
+
+
+def ffn(params, x, *, activation: str = "swiglu"):
+    up = x @ params["w_up"]
+    if activation == "swiglu":
+        up = jax.nn.silu(x @ params["w_gate"]) * up
+    else:
+        up = jax.nn.gelu(up)
+    return up @ params["w_down"]

@@ -1,0 +1,221 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) sequence mixer.
+
+TPU adaptation notes (DESIGN.md §2): the SSD *chunked* algorithm is already
+MXU-shaped — intra-chunk work is dense [c×c] / [c×N] matmuls and the
+inter-chunk recurrence is a tiny scan over chunk states — so the blocked
+structure maps 1:1 onto 128-aligned matmul tiles.  We split the fused
+``in_proj`` into per-component projections (z/x/B/C/dt) so tensor
+parallelism over SSM heads needs no uneven-slice bookkeeping; the math is
+identical to the fused form.
+
+Shapes: d_inner = heads·head_dim (expand×d_model), state N, conv width K.
+Head-sharded TP: every SSD einsum is head-local (B/C are head-shared and
+replicated), so the only TP collective is the out-projection reduce.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec, shard_if
+
+
+def _dims(cfg: ModelConfig):
+    heads, hd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return heads, hd, n, cfg.ssm_conv
+
+
+def mamba_specs(cfg: ModelConfig, fsdp: Optional[str] = None) -> dict:
+    d = cfg.d_model
+    h, p, n, k = _dims(cfg)
+    tp_h = shard_if(h, "model", 16)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "wz": ParamSpec((d, h, p), dt, P(fsdp, tp_h, None), "scaled"),
+        "wx": ParamSpec((d, h, p), dt, P(fsdp, tp_h, None), "scaled"),
+        "wB": ParamSpec((d, n), dt, P(fsdp, None), "scaled"),
+        "wC": ParamSpec((d, n), dt, P(fsdp, None), "scaled"),
+        "wdt": ParamSpec((d, h), dt, P(fsdp, tp_h), "scaled"),
+        "conv_x": ParamSpec((k, h, p), dt, P(None, tp_h, None), "scaled"),
+        "conv_B": ParamSpec((k, n), dt, P(), "scaled"),
+        "conv_C": ParamSpec((k, n), dt, P(), "scaled"),
+        "A_log": ParamSpec((h,), jnp.float32, P(tp_h), "zeros"),
+        "D": ParamSpec((h,), jnp.float32, P(tp_h), "ones"),
+        "dt_bias": ParamSpec((h,), jnp.float32, P(tp_h), "zeros"),
+        "norm": ParamSpec((h, p), jnp.float32, P(tp_h, None), "ones"),
+        "wo": ParamSpec((h, p, d), dt, P(tp_h, None, fsdp), "scaled"),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv along S.  x [B,S,...C], w [K, ...C]."""
+    k = w.shape[0]
+    pads = jnp.pad(x, [(0, 0), (k - 1, 0)] + [(0, 0)] * (x.ndim - 2))
+    out = sum(pads[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out
+
+
+def _gated_norm(scale, y, z, eps=1e-6):
+    """Per-head gated RMSNorm: norm(y * silu(z)) within each head."""
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * scale).astype(z.dtype)
+
+
+def ssd_chunked(xbar, log_a, Bm, Cm, chunk: int, initial_state=None,
+                unroll: bool = False):
+    """Chunked SSD scan.
+
+    xbar [B,S,H,P] (dt-discretized inputs), log_a [B,S,H] (≤0 decay logs),
+    Bm/Cm [B,S,N].  Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    Bsz, S, H, Pd = xbar.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = xbar.shape[1] // c
+    xb = xbar.reshape(Bsz, nc, c, H, Pd)
+    la = log_a.reshape(Bsz, nc, c, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, c, N)
+    Cc = Cm.reshape(Bsz, nc, c, N)
+
+    cum = jnp.cumsum(la, axis=2)                       # [B,nc,c,H] inclusive
+    total = cum[:, :, -1, :]                           # [B,nc,H]
+
+    # intra-chunk: y[i] += C_i · Σ_{j≤i} exp(cum_i - cum_j) B_j x̄_j
+    ii = jnp.arange(c)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,i,j,H]
+    mask = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(mask, jnp.exp(seg), 0.0)                # [B,nc,i,j,H]
+    CB = jnp.einsum("bnis,bnjs->bnij", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    y_intra = jnp.einsum("bnij,bnijh,bnjhp->bnihp", CB, L,
+                         xb.astype(jnp.float32))
+
+    # chunk states: S_n = Σ_j exp(total - cum_j) B_j ⊗ x̄_j   [B,nc,H,N,P]
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)     # [B,nc,c,H]
+    cstate = jnp.einsum("bnjs,bnjh,bnjhp->bnhsp", Bc.astype(jnp.float32),
+                        decay_to_end, xb.astype(jnp.float32))
+
+    # inter-chunk recurrence over nc chunks
+    if initial_state is None:
+        initial_state = jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+    else:
+        initial_state = initial_state.astype(jnp.float32)
+
+    from repro.models.layers import scan_or_unroll
+
+    def step(state, i):
+        cs, tot = cstate[:, i], total[:, i]                # [B,H,N,P],[B,H]
+        s_in = state
+        state = state * jnp.exp(tot)[:, :, None, None] + cs
+        return state, s_in
+
+    final_state, s_ins = scan_or_unroll(step, initial_state, nc, unroll)
+    s_ins = s_ins.transpose(1, 0, 2, 3, 4)                 # [B,nc,H,N,P]
+
+    # inter-chunk contribution: y[i] += C_i · exp(cum_i) S_in
+    y_inter = jnp.einsum("bnis,bnih,bnhsp->bnihp", Cc.astype(jnp.float32),
+                         jnp.exp(cum), s_ins)
+    y = (y_intra + y_inter).reshape(Bsz, nc * c, H, Pd)[:, :S]
+    return y, final_state
+
+
+def mamba_forward(params, cfg: ModelConfig, x, cache=None):
+    """x [B,S,D] -> [B,S,D].  If ``cache`` is not None, also return the
+    final (conv window, ssm state) for subsequent decoding."""
+    h, p, n, k = _dims(cfg)
+    z = jnp.einsum("bsd,dhp->bshp", x, params["wz"])
+    xi = jnp.einsum("bsd,dhp->bshp", x, params["wx"])
+    Bm = x @ params["wB"]
+    Cm = x @ params["wC"]
+    dt = jax.nn.softplus(
+        (x @ params["wdt"]).astype(jnp.float32) + params["dt_bias"])
+    xi_raw, Bm_raw, Cm_raw = xi, Bm, Cm        # pre-conv (cache windows)
+    xi = jax.nn.silu(_causal_conv(xi, params["conv_x"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, params["conv_B"]))
+    Cm = jax.nn.silu(_causal_conv(Cm, params["conv_C"]))
+    A = -jnp.exp(params["A_log"])
+    log_a = dt * A                                         # [B,S,H] ≤ 0
+    xbar = xi * dt[..., None].astype(xi.dtype)
+    y, final_state = ssd_chunked(xbar, log_a, Bm, Cm, cfg.ssm_chunk,
+                                 unroll=cfg.scan_impl == "unroll")
+    y = y + params["D"][None, None, :, None] * xi.astype(jnp.float32)
+    y = _gated_norm(params["norm"], y, z)
+    out = jnp.einsum("bshp,hpd->bsd", y, params["wo"])
+    if cache is not None:
+        cache = {
+            "ssm": final_state.astype(jnp.float32),
+            "conv_x": _last_window(xi_raw, k - 1),
+            "conv_B": _last_window(Bm_raw, k - 1),
+            "conv_C": _last_window(Cm_raw, k - 1),
+        }
+    return out, cache
+
+
+def _last_window(x, w):
+    """Last ``w`` positions along S (pad front if shorter)."""
+    S = x.shape[1]
+    if S >= w:
+        return x[:, S - w:]
+    return jnp.pad(x, [(0, 0), (w - S, 0)] + [(0, 0)] * (x.ndim - 2))
+
+
+def mamba_decode(params, cfg: ModelConfig, x, cache):
+    """Single-token recurrent update.  x [B,1,D]."""
+    h, p, n, k = _dims(cfg)
+    z = jnp.einsum("bsd,dhp->bshp", x, params["wz"])[:, 0]
+    xi = jnp.einsum("bsd,dhp->bshp", x, params["wx"])[:, 0]    # [B,H,P]
+    Bm = (x @ params["wB"])[:, 0]                              # [B,N]
+    Cm = (x @ params["wC"])[:, 0]
+    dt = jax.nn.softplus(
+        (x @ params["wdt"])[:, 0].astype(jnp.float32) + params["dt_bias"])
+
+    def conv_step(window, new, w):
+        # window [B, w-1(k-1), ...C], new [B, ...C]
+        full = jnp.concatenate([window, new[:, None]], axis=1)  # [B,k,...]
+        out = jnp.einsum("bk...,k...->b...", full, w)
+        return full[:, 1:], out
+
+    cx, xi_c = conv_step(cache["conv_x"], xi, params["conv_x"])
+    cB, Bm_c = conv_step(cache["conv_B"], Bm, params["conv_B"])
+    cC, Cm_c = conv_step(cache["conv_C"], Cm, params["conv_C"])
+    xi_c, Bm_c, Cm_c = (jax.nn.silu(xi_c), jax.nn.silu(Bm_c),
+                        jax.nn.silu(Cm_c))
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                        # [B,H]
+    xbar = (xi_c.astype(jnp.float32) * dt[..., None])
+    state = (cache["ssm"] * a[:, :, None, None]
+             + jnp.einsum("bs,bhp->bhsp", Bm_c.astype(jnp.float32), xbar))
+    y = jnp.einsum("bs,bhsp->bhp", Cm_c.astype(jnp.float32), state)
+    y = y + params["D"][None, :, None] * xi_c.astype(jnp.float32)
+    y = _gated_norm(params["norm"], y[:, None], z[:, None])[:, 0]
+    out = jnp.einsum("bhp,hpd->bd", y, params["wo"])[:, None]
+    return out, {"ssm": state, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+
+
+def mamba_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    h, p, n, k = _dims(cfg)
+    tp_h = shard_if(h, "model", 16)
+    b_ax = "data" if batch % 16 == 0 else None
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ssm": ParamSpec((batch, h, n, p), jnp.float32,
+                         P(b_ax, tp_h, None, None), "zeros"),
+        "conv_x": ParamSpec((batch, k - 1, h, p), dt,
+                            P(b_ax, None, tp_h, None), "zeros"),
+        "conv_B": ParamSpec((batch, k - 1, n), dt, P(b_ax, None, None),
+                            "zeros"),
+        "conv_C": ParamSpec((batch, k - 1, n), dt, P(b_ax, None, None),
+                            "zeros"),
+    }

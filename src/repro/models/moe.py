@@ -1,0 +1,93 @@
+"""MoE FFN layer: router + shared experts + paper-policy dispatch."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ffn, ffn_specs
+from repro.models.params import ParamSpec, shard_if
+from repro.moe.balancing import moe_dispatch, topk_route
+
+
+def moe_specs(cfg: ModelConfig, fsdp: Optional[str] = None) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    dt = jnp.dtype(cfg.dtype)
+    # expert-parallel axis: shard experts over 'model' when divisible,
+    # else shard the expert FFN inner dim (granite: 40 experts, f=512).
+    # serve_ep: one expert group per device over the data×model grid
+    if cfg.serve_ep:
+        tp_e, tp_f = ("data", "model"), None
+        fsdp = None              # expert dim consumes both axes
+    else:
+        tp_e = shard_if(e, "model", 16)
+        tp_f = None if tp_e else shard_if(f, "model", 16)
+    specs = {
+        "router": ParamSpec((d, e), jnp.float32, P(fsdp, None), "scaled"),
+        "experts": {
+            "w_up": ParamSpec((e, d, f), dt, P(tp_e, fsdp, tp_f), "scaled"),
+            "w_gate": ParamSpec((e, d, f), dt, P(tp_e, fsdp, tp_f), "scaled"),
+            "w_down": ParamSpec((e, f, d), dt, P(tp_e, tp_f, fsdp), "scaled"),
+        },
+    }
+    if cfg.ffn_activation != "swiglu":
+        del specs["experts"]["w_gate"]
+    if cfg.num_shared_experts:
+        specs["shared"] = ffn_specs(
+            d, cfg.moe_d_ff * cfg.num_shared_experts,
+            activation=cfg.ffn_activation, fsdp=fsdp, dtype=dt)
+    return specs
+
+
+def moe_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    """Static per-row capacity = cf × mean assignments per expert."""
+    mean = seq_len * cfg.experts_per_token / cfg.num_experts
+    return max(int(mean * cfg.moe_capacity_factor) + 1, 4)
+
+
+def moe_ffn(params, cfg: ModelConfig, x, *, method: Optional[str] = None):
+    """x [B,S,D] -> (y, aux_losses dict)."""
+    from repro.moe import sharded
+    method = method or cfg.moe_balance
+    logits = x.astype(jnp.float32) @ params["router"]
+    mesh = sharded.ACTIVE_MESH
+    experts = params["experts"]
+    num_experts = cfg.num_experts
+    if (mesh is not None and cfg.moe_impl == "shard_map"
+            and num_experts % mesh.shape.get("model", 1) != 0):
+        # indivisible expert counts (granite: 40/16): pad with dummies
+        experts, logits, num_experts = sharded.pad_experts(
+            experts, logits, num_experts, mesh.shape["model"])
+    weights, ids, aux = topk_route(logits, cfg.experts_per_token)
+    if cfg.serve_ep and mesh is not None:
+        B, S, _ = x.shape
+        cap = max(int(B * S * cfg.experts_per_token / num_experts
+                      * cfg.moe_capacity_factor) + 1, 8)
+        y = sharded.ep_global_dispatch(
+            x, ids, weights, experts, mesh=mesh, num_experts=num_experts,
+            capacity=cap, activation=cfg.ffn_activation)
+        stats = {"dropped_frac": jnp.float32(0),
+                 "padding_waste": jnp.float32(0)}
+    elif cfg.moe_impl == "shard_map" and mesh is not None:
+        y = sharded.sharded_moe_dispatch(
+            x, ids, weights, experts, mesh=mesh,
+            num_experts=num_experts,
+            capacity=moe_capacity(cfg, x.shape[1]),
+            activation=cfg.ffn_activation, fsdp=cfg.fsdp)
+        stats = {"dropped_frac": jnp.float32(0), "padding_waste":
+                 jnp.float32(0)}
+    else:
+        y, stats = moe_dispatch(
+            x, ids, weights, params["experts"],
+            num_experts=cfg.num_experts,
+            capacity=moe_capacity(cfg, x.shape[1]),
+            activation=cfg.ffn_activation,
+            method=method)
+    if cfg.num_shared_experts:
+        y = y + ffn(params["shared"], x, activation=cfg.ffn_activation)
+    aux.update(stats)
+    return y, aux

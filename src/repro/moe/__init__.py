@@ -1,0 +1,2 @@
+from repro.moe.balancing import (  # noqa: F401
+    topk_route, moe_dispatch, calibrate_capacity, DISPATCH_METHODS)

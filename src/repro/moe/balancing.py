@@ -1,0 +1,257 @@
+"""The paper's load-balancing strategies as MoE dispatch policies.
+
+Token→expert routing is the LM-stack incarnation of the paper's problem:
+expert loads follow a skewed, data-dependent distribution exactly like node
+outdegrees, and the dispatch policy decides how that skew maps onto
+fixed-shape TPU compute.  The correspondence (DESIGN.md §3):
+
+==============  =====================================================
+paper strategy  MoE dispatch policy (this module)
+==============  =====================================================
+BS (node)       ``padded`` — per-expert capacity slots, padding waste
+                ∝ load skew (GShard-style einsum dispatch)
+EP/WD (edge /   ``sorted_block`` — sort assignments by expert +
+ decomposition)  prefix-sum + ragged grouped GEMM (``jax.lax.ragged_dot``);
+                zero padding, perfect lane balance — the merge-path WD
+                dispatch over the "expert CSR"
+NS (split)      ``replicate`` — experts over capacity spill into virtual
+                replica experts (children) sharing the parent's weights
+HP (hier.)      ``multi_round`` — R sub-rounds of capacity C/R each;
+                bounded per-round working set, overflow drains in later
+                rounds (time decomposition)
+==============  =====================================================
+
+``calibrate_capacity`` is the paper's histogram MDT heuristic applied to
+observed expert loads: pick the tallest load-histogram bin and size the
+static capacity to its upper edge.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DISPATCH_METHODS = ("padded", "sorted_block", "replicate", "multi_round")
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def topk_route(router_logits: jax.Array, k: int):
+    """router_logits [..., E] -> (weights [..., k] fp32, ids [..., k], aux).
+
+    aux carries the standard load-balance loss (switch-style) and router
+    z-loss, both needed to *train* toward balance — the paper's point that
+    static assignment is not enough is mirrored by routers drifting skewed
+    without this pressure.
+    """
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    e = router_logits.shape[-1]
+    # fraction of assignments per expert vs mean router prob per expert
+    onehot = jax.nn.one_hot(ids, e, dtype=jnp.float32)      # [...,k,E]
+    frac = onehot.sum(-2).reshape(-1, e).mean(0) / k
+    mean_prob = probs.reshape(-1, e).mean(0)
+    lb_loss = e * jnp.sum(frac * mean_prob)
+    z = jax.scipy.special.logsumexp(router_logits.astype(jnp.float32), -1)
+    z_loss = jnp.mean(z ** 2)
+    return weights, ids, {"lb_loss": lb_loss, "z_loss": z_loss}
+
+
+def calibrate_capacity(sample_loads: np.ndarray, histogram_bins: int = 10,
+                       ) -> int:
+    """Histogram-MDT capacity (paper §III-B heuristic on expert loads)."""
+    loads = np.asarray(sample_loads)
+    loads = loads[loads > 0]
+    if loads.size == 0:
+        return 1
+    mx = int(loads.max())
+    if mx <= 1:
+        return 1
+    hist, _ = np.histogram(loads, bins=histogram_bins, range=(0, mx))
+    bin_index = int(np.argmax(hist))
+    return max(1, int(round((bin_index + 1) / histogram_bins * mx)))
+
+
+# ---------------------------------------------------------------------------
+# shared plumbing: per-row (GShard-group) positions, scatter / gather
+# ---------------------------------------------------------------------------
+
+def _positions(ids: jax.Array, num_experts: int):
+    """ids [B,A] -> position of each assignment within its expert's queue
+    (per batch row, so everything stays local to the data shard).
+
+    The cumsum over the one-hot assignment matrix is the same prefix-sum
+    that drives the paper's WD offsets (Thrust scan ⇒ jnp.cumsum)."""
+    onehot = jax.nn.one_hot(ids, num_experts, dtype=jnp.int32)  # [B,A,E]
+    pos = jnp.cumsum(onehot, axis=1) - 1                        # [B,A,E]
+    return jnp.take_along_axis(
+        pos, ids[..., None], axis=-1)[..., 0], onehot
+
+
+def _scatter_dispatch(x, ids, pos, keep, num_slots):
+    """x [B,A,D] -> expert slots [B,num_slots,D] (dropped -> trash slot)."""
+    B, A, D = x.shape
+    idx = jnp.where(keep, ids, num_slots)                       # [B,A]
+
+    def row(xr, ir):
+        return jnp.zeros((num_slots + 1, D), x.dtype).at[ir].add(xr)
+
+    slots = jax.vmap(row)(x, idx)
+    return slots[:, :num_slots]
+
+
+def _gather_combine(expert_out_flat, flat_idx, keep, weights):
+    """expert_out_flat [B,num_slots,D] -> y [B,A,D] weighted."""
+    B, A = flat_idx.shape
+    idx = jnp.clip(flat_idx, 0, expert_out_flat.shape[1] - 1)
+    y = jnp.take_along_axis(
+        expert_out_flat, idx[..., None], axis=1)
+    return y * (weights * keep)[..., None].astype(y.dtype)
+
+
+def _expert_ffn(expert_inputs, wp, activation: str):
+    """expert_inputs [E,C*,D] × per-expert FFN weights -> [E,C*,D]."""
+    up = jnp.einsum("ecd,edf->ecf", expert_inputs, wp["w_up"])
+    if activation == "swiglu":
+        gate = jnp.einsum("ecd,edf->ecf", expert_inputs, wp["w_gate"])
+        up = jax.nn.silu(gate) * up
+    else:
+        up = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", up, wp["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# the four policies
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("num_experts", "capacity", "activation",
+                                   "method", "num_rounds", "split_factor"))
+def moe_dispatch(x, ids, weights, expert_params, *, num_experts: int,
+                 capacity: int, activation: str = "swiglu",
+                 method: str = "padded", num_rounds: int = 4,
+                 split_factor: int = 2):
+    """Dispatch/compute/combine under one of the four paper policies.
+
+    x [B,S,D]; ids/weights [B,S,K].  Returns (y [B,S,D], stats).
+    ``capacity`` is per-expert per-row (tokens), the static analogue of MDT.
+    """
+    B, S, D = x.shape
+    K = ids.shape[-1]
+    A = S * K
+    xa = jnp.repeat(x, K, axis=1).reshape(B, A, D)      # assignment inputs
+    ida = ids.reshape(B, A)
+    wa = weights.reshape(B, A).astype(jnp.float32)
+
+    if method == "sorted_block":
+        return _sorted_block(x, xa, ida, wa, expert_params, num_experts,
+                             activation, B, S, K, D)
+
+    pos, _ = _positions(ida, num_experts)               # [B,A]
+
+    if method == "padded":
+        keep = pos < capacity
+        flat = ida * capacity + pos
+        slots = _scatter_dispatch(xa, flat, pos, keep, num_experts * capacity)
+        out = _expert_ffn(slots.reshape(B * num_experts, capacity, D)
+                          .reshape(B, num_experts, capacity, D)
+                          .transpose(1, 0, 2, 3)
+                          .reshape(num_experts, B * capacity, D),
+                          expert_params, activation)
+        out = (out.reshape(num_experts, B, capacity, D)
+               .transpose(1, 0, 2, 3).reshape(B, num_experts * capacity, D))
+        y = _gather_combine(out, flat, keep, wa)
+        stats = _drop_stats(keep, capacity, num_experts, A)
+
+    elif method == "replicate":
+        # NS: overflow beyond capacity/split spills into replica (child)
+        # experts that share the parent's weights.
+        cap_child = max(capacity // split_factor, 1)
+        replica = jnp.clip(pos // cap_child, 0, split_factor - 1)
+        vpos = pos - replica * cap_child
+        vid = ida + replica * num_experts                # virtual id [0,2E)
+        keep = pos < cap_child * split_factor
+        nv = num_experts * split_factor
+        flat = vid * cap_child + vpos
+        slots = _scatter_dispatch(xa, flat, vpos, keep, nv * cap_child)
+        # children index the parent's weights (weight sharing ≡ split node
+        # keeps the parent's edges)
+        wp = jax.tree_util.tree_map(
+            lambda w: jnp.concatenate([w] * split_factor, 0), expert_params)
+        out = _expert_ffn(slots.reshape(B, nv, cap_child, D)
+                          .transpose(1, 0, 2, 3)
+                          .reshape(nv, B * cap_child, D), wp, activation)
+        out = (out.reshape(nv, B, cap_child, D)
+               .transpose(1, 0, 2, 3).reshape(B, nv * cap_child, D))
+        y = _gather_combine(out, flat, keep, wa)
+        stats = _drop_stats(keep, cap_child * split_factor, num_experts, A)
+
+    elif method == "multi_round":
+        # HP: R sub-rounds of capacity C/R — bounded per-round working set.
+        cap_r = max(capacity // num_rounds, 1)
+        y = jnp.zeros((B, A, D), x.dtype)
+        kept_any = jnp.zeros((B, A), bool)
+        for r in range(num_rounds):
+            in_round = (pos >= r * cap_r) & (pos < (r + 1) * cap_r)
+            rpos = pos - r * cap_r
+            flat = ida * cap_r + rpos
+            slots = _scatter_dispatch(xa, flat, rpos, in_round,
+                                      num_experts * cap_r)
+            out = _expert_ffn(slots.reshape(B, num_experts, cap_r, D)
+                              .transpose(1, 0, 2, 3)
+                              .reshape(num_experts, B * cap_r, D),
+                              expert_params, activation)
+            out = (out.reshape(num_experts, B, cap_r, D)
+                   .transpose(1, 0, 2, 3)
+                   .reshape(B, num_experts * cap_r, D))
+            y = y + _gather_combine(out, flat, in_round, wa)
+            kept_any = kept_any | in_round
+        keep = kept_any
+        stats = _drop_stats(keep, cap_r * num_rounds, num_experts, A)
+
+    else:
+        raise ValueError(f"unknown dispatch method {method!r}")
+
+    y = y.reshape(B, S, K, D).sum(2)
+    return y.astype(x.dtype), stats
+
+
+def _sorted_block(x, xa, ida, wa, expert_params, num_experts, activation,
+                  B, S, K, D):
+    """WD/EP: flatten all assignments globally, sort by expert, grouped
+    ragged GEMM — zero padding (dropless), MXU-contiguous blocks."""
+    T = B * S * K
+    flat_x = xa.reshape(T, D)
+    flat_id = ida.reshape(T)
+    flat_w = wa.reshape(T)
+    order = jnp.argsort(flat_id)
+    inv = jnp.argsort(order)
+    sx = flat_x[order]
+    group_sizes = jnp.bincount(flat_id, length=num_experts).astype(jnp.int32)
+    up = jax.lax.ragged_dot(sx, expert_params["w_up"], group_sizes)
+    if activation == "swiglu":
+        gate = jax.lax.ragged_dot(sx, expert_params["w_gate"], group_sizes)
+        up = jax.nn.silu(gate) * up
+    else:
+        up = jax.nn.gelu(up)
+    down = jax.lax.ragged_dot(up, expert_params["w_down"], group_sizes)
+    y = down[inv] * flat_w[:, None].astype(down.dtype)
+    y = y.reshape(B, S, K, D).sum(2)
+    stats = {"dropped_frac": jnp.float32(0.0),
+             "padding_waste": jnp.float32(0.0)}
+    return y.astype(x.dtype), stats
+
+
+def _drop_stats(keep, total_capacity, num_experts, A):
+    kept = jnp.sum(keep, dtype=jnp.float32)
+    issued = jnp.float32(keep.shape[0] * num_experts * total_capacity)
+    return {
+        "dropped_frac": 1.0 - kept / (keep.shape[0] * A),
+        "padding_waste": 1.0 - kept / issued,
+    }

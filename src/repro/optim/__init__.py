@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, clip_by_global_norm  # noqa: F401
+from repro.optim.schedules import warmup_cosine, linear  # noqa: F401

@@ -1,0 +1,106 @@
+"""AdamW, pure-JAX (no optax dependency).
+
+Giant-model accommodations:
+* ``state_dtype='bfloat16'`` halves optimizer memory (m/v in bf16) — used by
+  the 671B/398B configs so params+state+grads fit the fleet HBM budget
+  (see EXPERIMENTS.md §Dry-run memory table).
+* Optimizer state inherits each parameter's PartitionSpec, so under FSDP
+  the state is ZeRO-sharded automatically (state specs mirror param specs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), \
+        gnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: Optional[float] = 1.0
+    state_dtype: Optional[str] = None    # None -> float32 moments
+
+    def _sdt(self, p):
+        return jnp.dtype(self.state_dtype) if self.state_dtype else jnp.float32
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, self._sdt(p))
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def lr_at(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.float32(self.learning_rate)
+
+    def update(self, grads, state, params):
+        """Returns (new_params, new_state, metrics)."""
+        step = state["step"] + 1
+        metrics = {}
+        if self.max_grad_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+            metrics["grad_norm"] = gnorm
+        lr = self.lr_at(step)
+        metrics["lr"] = lr
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + g32 * g32 * (1 - b2)
+            mhat = m32 / c1
+            vhat = v32 / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:   # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return (new_p.astype(p.dtype), m32.astype(m.dtype),
+                    v32.astype(v.dtype))
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state["m"])
+        flat_v = jax.tree_util.tree_leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        return new_params, {"m": new_m, "v": new_v, "step": step}, metrics
+
+    def state_specs(self, param_specs):
+        """ParamSpec tree for the optimizer state (mirrors param sharding)."""
+        from repro.models.params import ParamSpec, is_spec
+        sdt = jnp.dtype(self.state_dtype) if self.state_dtype else jnp.float32
+
+        def mom(s: ParamSpec) -> ParamSpec:
+            return ParamSpec(s.shape, sdt, s.pspec, "zeros")
+
+        from jax.sharding import PartitionSpec as P
+        return {
+            "m": jax.tree_util.tree_map(mom, param_specs, is_leaf=is_spec),
+            "v": jax.tree_util.tree_map(mom, param_specs, is_leaf=is_spec),
+            "step": ParamSpec((), jnp.int32, P(), "zeros"),
+        }

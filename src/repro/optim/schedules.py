@@ -1,0 +1,27 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def linear(peak: float, warmup_steps: int, total_steps: int):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, peak * (1 - frac))
+    return schedule

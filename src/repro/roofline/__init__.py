@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HARDWARE, collective_bytes_from_hlo, roofline_terms, RooflineReport)

@@ -1,0 +1,137 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs   / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips × HBM_bw)
+    collective term = coll_bytes  / (chips × link_bw)
+
+``cost_analysis()`` yields per-device FLOPs/bytes of the SPMD-partitioned
+module (we scale by chip count to match the global-numerator formulas).
+Collective bytes are NOT in cost_analysis — we parse the partitioned HLO
+and sum the result-buffer sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (per-device bytes; an
+upper-bound proxy for link traffic that is consistent across iterations,
+which is what the hillclimb needs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+# TPU v5e per chip
+HARDWARE = {
+    "peak_flops": 197e12,      # bf16 FLOP/s
+    "hbm_bw": 819e9,           # bytes/s
+    "ici_bw": 50e9,            # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}:#() ]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-collective-type result bytes (per device) from partitioned HLO."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(2)
+        if op + "-done" in line and op + "-done(" in line:
+            continue  # -done carries the same buffer as -start
+        out[op] += _shape_bytes(m.group(1))
+        counts[op] += 1
+    out_total = sum(out.values())
+    return {"per_type": out, "counts": counts, "total": out_total}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # global (per-device × chips)
+    hlo_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    bytes_per_device: Optional[float] = None
+    collective_detail: Optional[dict] = None
+
+    def table_row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.compute_s*1e3:.2f} | {self.memory_s*1e3:.2f} | "
+                f"{self.collective_s*1e3:.2f} | {self.dominant} | "
+                f"{self.useful_ratio:.2f} |")
+
+
+def roofline_terms(*, arch: str, shape: str, mesh_name: str, chips: int,
+                   per_device_flops: float, per_device_bytes: float,
+                   per_device_collective_bytes: float, model_flops: float,
+                   bytes_per_device: Optional[float] = None,
+                   collective_detail: Optional[dict] = None,
+                   ) -> RooflineReport:
+    hw = HARDWARE
+    g_flops = per_device_flops * chips
+    g_bytes = per_device_bytes * chips
+    g_coll = per_device_collective_bytes * chips
+    compute_s = g_flops / (chips * hw["peak_flops"])
+    memory_s = g_bytes / (chips * hw["hbm_bw"])
+    coll_s = g_coll / (chips * hw["ici_bw"])
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=g_flops, hlo_bytes=g_bytes, collective_bytes=g_coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant, model_flops=model_flops,
+        useful_ratio=(model_flops / g_flops) if g_flops else 0.0,
+        bytes_per_device=bytes_per_device,
+        collective_detail=collective_detail,
+    )
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int, global_batch: int,
+                    active_params: int) -> float:
+    """6·N_active·D for training, 2·N_active·D forward-only."""
+    if shape_kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * active_params * tokens
+    if shape_kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * active_params * tokens
+    # decode: one token per sequence
+    return 2.0 * active_params * global_batch

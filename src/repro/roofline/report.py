@@ -1,0 +1,104 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+JSON records.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_records(d: str) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}µs"
+
+
+def fmt_b(x) -> str:
+    if x is None:
+        return "—"
+    for unit, div in (("TiB", 2**40), ("GiB", 2**30), ("MiB", 2**20)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    rows = ["| arch | shape | mesh | status | compile | HLO FLOPs/dev | "
+            "HLO bytes/dev | coll bytes/dev | mem/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skip | — | — | — | — | — |")
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']}s | {r['per_device_flops']:.3e} | "
+            f"{r['per_device_bytes']:.3e} | "
+            f"{r['collective_bytes_per_device']:.3e} | "
+            f"{fmt_b(r.get('bytes_per_device'))} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "useful (6N·D/HLO) | note |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                        f"| skipped: sub-quadratic-only shape |")
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"**{rf['dominant']}** | {rf['useful_ratio']:.2f} | |")
+    return "\n".join(rows)
+
+
+def summarize(recs):
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skip = [r for r in recs if r.get("status") == "skipped"]
+    doms = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    return {"ok": len(ok), "skipped": len(skip), "dominants": doms}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    recs = [r for r in recs if "_opt" not in json.dumps(r.get("arch", ""))]
+    print("## Dry-run records\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table(recs, args.mesh))
+    print("\n", summarize(recs))
+
+
+if __name__ == "__main__":
+    main()

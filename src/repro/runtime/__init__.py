@@ -1,0 +1,2 @@
+from repro.runtime.trainer import Trainer, TrainConfig  # noqa: F401
+from repro.runtime.serve import ServeLoop  # noqa: F401

@@ -1,0 +1,124 @@
+"""Batched serving loop with continuous batching.
+
+Slot-based scheduler: a fixed decode batch of ``num_slots`` sequences; when
+a sequence emits EOS (or hits max_len) its slot is immediately refilled
+from the request queue via a single-sequence prefill.  This is the standard
+production decode layout (static shapes for the jitted decode step; slot
+occupancy is data, not shape).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # [S] token ids
+    max_new_tokens: int = 32
+    generated: Optional[list] = None
+
+
+class ServeLoop:
+    """Drives jitted ``prefill_fn(params, tokens, cache, slot)`` and
+    ``decode_fn(params, cache, tokens, positions)`` over a slot batch.
+
+    For simplicity each slot's cache region is written by a slot-sliced
+    prefill; the decode step advances all occupied slots together.
+    """
+
+    def __init__(self, model, params, *, num_slots: int, max_len: int,
+                 eos_id: int = 1):
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        cfg = model.cfg
+        from repro.models.params import init_params
+        self.cache = init_params(model.cache_specs(num_slots, max_len),
+                                 jax.random.PRNGKey(0))
+        self.positions = np.zeros(num_slots, np.int32)   # next position
+        self.active: List[Optional[Request]] = [None] * num_slots
+        self._decode = jax.jit(self._decode_impl)
+
+    def _decode_impl(self, params, cache, tokens, position):
+        return self.model.decode_step(params, cache, tokens, position)
+
+    # -- scheduling -----------------------------------------------------
+    @staticmethod
+    def _merge_slot(full, one, slot: int, num_slots: int):
+        """Write the batch-1 cache ``one`` into ``full`` at ``slot`` along
+        the (auto-detected) batch axis of each leaf."""
+        def merge(f, o):
+            f, o = jnp.asarray(f), jnp.asarray(o)
+            if f.ndim == 0 or f.ndim != o.ndim or f.shape == o.shape:
+                return f          # metadata leaves (lengths/positions)
+            for ax in range(f.ndim):
+                if (f.shape[ax] == num_slots and o.shape[ax] == 1
+                        and f.shape[:ax] == o.shape[:ax]
+                        and f.shape[ax + 1:] == o.shape[ax + 1:]):
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        f, o.astype(f.dtype), slot, axis=ax)
+            raise ValueError(f"no batch axis: {f.shape} vs {o.shape}")
+        return jax.tree_util.tree_map(merge, full, one)
+
+    def _fill_slot(self, slot: int, req: Request):
+        """Single-sequence prefill into a slot (fresh batch-1 cache,
+        merged into the live batch along each leaf's slot axis)."""
+        from repro.models.params import init_params
+        tokens = jnp.asarray(req.prompt[None, :], jnp.int32)
+        cache1 = init_params(self.model.cache_specs(1, self.max_len),
+                             jax.random.PRNGKey(0))
+        _, cache1, _ = self.model.forward(
+            self.params, {"tokens": tokens}, mode="prefill", cache=cache1)
+        self.cache = self._merge_slot(self.cache, cache1, slot,
+                                      self.num_slots)
+        self.positions[slot] = len(req.prompt)
+        req.generated = []
+        self.active[slot] = req
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Run to completion; returns requests with ``generated`` filled.
+
+        Continuous batching: slots decode at their OWN positions (ragged);
+        a finished slot is refilled immediately from the queue."""
+        queue = list(requests)
+        done: List[Request] = []
+        for s in range(self.num_slots):
+            if queue:
+                self._fill_slot(s, queue.pop(0))
+        while any(a is not None for a in self.active):
+            last_tokens = np.zeros((self.num_slots, 1), np.int32)
+            pos_vec = np.full(self.num_slots, self.max_len - 1, np.int32)
+            for s, a in enumerate(self.active):
+                if a is None:
+                    continue
+                last_tokens[s, 0] = (a.generated[-1] if a.generated
+                                     else a.prompt[-1])
+                pos_vec[s] = self.positions[s]
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(last_tokens),
+                jnp.asarray(pos_vec))
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            for s, a in enumerate(self.active):
+                if a is None:
+                    continue
+                tok = int(nxt[s] if nxt.ndim == 1 else nxt[s, 0])
+                a.generated.append(tok)
+                self.positions[s] += 1
+                finished = (tok == self.eos_id
+                            or len(a.generated) >= a.max_new_tokens
+                            or self.positions[s] >= self.max_len - 1)
+                if finished:
+                    done.append(a)
+                    self.active[s] = None
+                    if queue:
+                        self._fill_slot(s, queue.pop(0))
+        return done

@@ -1,0 +1,136 @@
+"""Fault-tolerant training runtime.
+
+The loop is built for fleets where *something is always failing*:
+
+* checkpoint/restart — async step-atomic checkpoints; on any step exception
+  the loop restores the latest committed step and continues (transient
+  device failures), with bounded retries (persistent failures surface).
+* deterministic data — batches are pure f(seed, step); a restart replays
+  from the checkpointed step with zero coordination.
+* straggler mitigation — per-step wall-time EWMA; steps slower than
+  ``straggler_factor``× the EWMA are logged and counted.  On a real fleet
+  this signal feeds the scheduler (rank eviction / hot spares); here it is
+  surfaced in metrics so the policy layer is testable.
+* elastic rescale — ``Trainer.resume`` accepts a different mesh/shardings;
+  restore re-device_puts the saved state under the new layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import (AsyncCheckpointer, latest_step,
+                                    restore_checkpoint)
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    log_every: int = 10
+    max_retries: int = 3
+    straggler_factor: float = 2.0
+    ewma_alpha: float = 0.1
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    seconds: float
+    metrics: dict
+    straggler: bool
+
+
+class Trainer:
+    """Drives a jitted ``train_step(state, batch) -> (state, metrics)``."""
+
+    def __init__(self, train_step: Callable, init_state: Any,
+                 pipeline, config: TrainConfig,
+                 state_shardings: Any = None):
+        self.train_step = train_step
+        self.state = init_state
+        self.pipeline = pipeline
+        self.config = config
+        self.state_shardings = state_shardings
+        self.step = 0
+        self.ckpt = (AsyncCheckpointer(config.checkpoint_dir)
+                     if config.checkpoint_dir else None)
+        self.history: list[StepRecord] = []
+        self.straggler_count = 0
+        self._ewma: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def maybe_restore(self) -> bool:
+        """Resume from the latest committed checkpoint, if any."""
+        cfg = self.config
+        if not cfg.checkpoint_dir:
+            return False
+        last = latest_step(cfg.checkpoint_dir)
+        if last is None:
+            return False
+        self.state, meta = restore_checkpoint(
+            cfg.checkpoint_dir, last, self.state, self.state_shardings)
+        self.step = meta["step"]
+        log.info("restored checkpoint at step %d", self.step)
+        return True
+
+    # ------------------------------------------------------------------
+    def run(self) -> list[StepRecord]:
+        cfg = self.config
+        retries = 0
+        while self.step < cfg.total_steps:
+            batch = self.pipeline.batch_at(self.step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            try:
+                new_state, metrics = self.train_step(self.state, batch)
+                jax.block_until_ready(jax.tree_util.tree_leaves(new_state)[0])
+            except Exception as exc:                     # noqa: BLE001
+                retries += 1
+                log.warning("step %d failed (%s); retry %d/%d",
+                            self.step, exc, retries, cfg.max_retries)
+                if retries > cfg.max_retries:
+                    raise
+                if self.ckpt is not None:
+                    self.ckpt.wait()
+                if not self.maybe_restore():
+                    # no checkpoint yet: retry the step as-is
+                    continue
+                continue
+            retries = 0
+            self.state = new_state
+            dt = time.perf_counter() - t0
+            straggle = False
+            if self._ewma is not None and dt > cfg.straggler_factor * self._ewma:
+                straggle = True
+                self.straggler_count += 1
+                log.warning("straggler step %d: %.3fs vs ewma %.3fs",
+                            self.step, dt, self._ewma)
+            self._ewma = (dt if self._ewma is None else
+                          (1 - cfg.ewma_alpha) * self._ewma
+                          + cfg.ewma_alpha * dt)
+            host_metrics = {k: float(np.asarray(v))
+                            for k, v in metrics.items()}
+            self.history.append(StepRecord(self.step, dt, host_metrics,
+                                           straggle))
+            self.step += 1
+            if cfg.checkpoint_dir and self.step % cfg.checkpoint_every == 0:
+                self.ckpt.save(self.step, self.state,
+                               {"pipeline_seed": self.pipeline.seed})
+            if self.step % cfg.log_every == 0:
+                log.info("step %d loss=%.4f %.3fs/step", self.step,
+                         host_metrics.get("loss", float("nan")), dt)
+        if self.ckpt is not None:
+            self.ckpt.save(self.step, self.state,
+                           {"pipeline_seed": self.pipeline.seed})
+            self.ckpt.wait()
+        return self.history

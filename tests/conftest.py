@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests see the real (1-device) host — the 512-device override belongs to
+# the dry-run ONLY (repro/launch/dryrun.py sets it before importing jax).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

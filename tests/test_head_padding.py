@@ -1,0 +1,73 @@
+"""Head splitting (`pad_heads`, §Perf A3/D1): the padded/regrouped layout
+must compute EXACTLY the same function as the unpadded model (weight
+surgery maps the padded parameters back to the canonical layout)."""
+
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import attention as attn
+from repro.models.model import LanguageModel
+from repro.models.params import init_params
+
+
+def test_layout_plans():
+    # granite: 24Q/8kv -> 32 slots over 16 kv (1.33x padding)
+    g = dataclasses.replace(get_config("granite_moe_3b_a800m"),
+                            pad_heads=True)
+    assert attn.head_layout(g) == (32, 16, 2, 2)
+    # starcoder2: 48Q/4kv -> pure permutation, zero padding
+    s = dataclasses.replace(get_config("starcoder2_15b"), pad_heads=True)
+    assert attn.head_layout(s) == (48, 16, 4, 3)
+    assert all(h >= 0 for h in attn.q_head_map(s))
+    # qwen1.5: 20 kv heads — no clean plan, must decline
+    q = dataclasses.replace(get_config("qwen1_5_4b"), pad_heads=True)
+    assert attn.head_layout(q) is None
+    # deepseek-7b: 32/32 already divisible — no-op
+    d = dataclasses.replace(get_config("deepseek_7b"), pad_heads=True)
+    assert attn.head_layout(d) is None
+
+
+def _unpad_params(tree, qmap):
+    """Map padded wq/wo back to the canonical head order."""
+    out = copy.deepcopy(tree)
+    sel = [i for i, h in enumerate(qmap) if h >= 0]
+    order = np.argsort([qmap[i] for i in sel])
+    idx = jnp.asarray(np.array(sel)[order])
+
+    def fix(blk):
+        mx = blk.get("mixer", {})
+        if "wq" in mx and mx["wq"].shape[-2] == len(qmap):
+            mx["wq"] = jnp.take(mx["wq"], idx, axis=mx["wq"].ndim - 2)
+            mx["wo"] = jnp.take(mx["wo"], idx, axis=mx["wo"].ndim - 3)
+
+    for blk in out["prefix"]:
+        fix(blk)
+    body = out["body"] if isinstance(out["body"], list) else [out["body"]]
+    for blk in body:
+        fix(blk)
+    return out
+
+
+@pytest.mark.parametrize("hq,hkv", [(24, 8), (48, 4), (16, 8)])
+def test_padded_model_exact(hq, hkv):
+    cfg0 = dataclasses.replace(
+        get_config("granite_moe_3b_a800m").smoke(), num_heads=hq,
+        num_kv_heads=hkv, head_dim=16, remat=False, dtype="float32",
+        moe_balance="sorted_block")
+    cfg1 = dataclasses.replace(cfg0, pad_heads=True)
+    assert attn.head_layout(cfg1) is not None
+    m0, m1 = LanguageModel(cfg0), LanguageModel(cfg1)
+    p1 = init_params(m1.param_specs(), jax.random.PRNGKey(0))
+    p0 = _unpad_params(p1, attn.q_head_map(cfg1))
+    tok = jnp.asarray(np.random.default_rng(0).integers(
+        2, cfg0.vocab_size, (2, 16)), jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    l0, _, _ = m0.forward(p0, batch, mode="train")
+    l1, _, _ = m1.forward(p1, batch, mode="train")
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=5e-4)

@@ -1,0 +1,117 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes (required deliverable (c))."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.find_offsets import find_offsets
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_chunk import ssd_chunk_dual
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# find_offsets — the paper's WD offset kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("f", [1, 7, 128, 1000, 4096])
+@pytest.mark.parametrize("max_deg", [0, 1, 9, 300])
+def test_find_offsets_sweep(f, max_deg):
+    deg = RNG.integers(0, max_deg + 1, f).astype(np.int32)
+    prefix = jnp.asarray(np.cumsum(deg), jnp.int32)
+    total = int(prefix[-1]) if f else 0
+    cap = max(1024, total)
+    got = find_offsets(prefix, cap, interpret=True)
+    want = ref.find_offsets_ref(prefix, cap)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_find_offsets_degenerate_all_zero():
+    prefix = jnp.zeros((16,), jnp.int32)
+    got = find_offsets(prefix, 128, interpret=True)
+    want = ref.find_offsets_ref(prefix, 128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_SHAPES = [
+    # B, Hq, Hkv, Sq, Sk, hd
+    (1, 1, 1, 128, 128, 64),
+    (2, 4, 2, 256, 256, 64),
+    (1, 8, 2, 128, 512, 128),   # GQA 4:1, long K
+    (2, 6, 3, 384, 384, 32),
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(shape, dtype, causal):
+    B, Hq, Hkv, Sq, Sk, hd = shape
+    q = jnp.asarray(RNG.standard_normal((B, Hq, Sq, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, Sk, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, Sk, hd)), dtype)
+    got = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol)
+
+
+def test_flash_attention_padding_wrapper():
+    q = jnp.asarray(RNG.standard_normal((1, 2, 200, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 200, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 200, 64)), jnp.float32)
+    got = ops.attention(q, k, v, causal=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bn,c,h,p,n", [
+    (1, 32, 1, 16, 8), (3, 64, 4, 32, 16), (2, 128, 2, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_chunk_sweep(bn, c, h, p, n, dtype):
+    xb = jnp.asarray(RNG.standard_normal((bn, c, h, p)) * 0.1, dtype)
+    la = jnp.asarray(-np.abs(RNG.standard_normal((bn, c, h))) * 0.05,
+                     jnp.float32)
+    cum = jnp.cumsum(la, axis=1)
+    Bm = jnp.asarray(RNG.standard_normal((bn, c, n)) * 0.3, dtype)
+    Cm = jnp.asarray(RNG.standard_normal((bn, c, n)) * 0.3, dtype)
+    y1, s1 = ssd_chunk_dual(xb, cum, Bm, Cm, interpret=True)
+    y2, s2 = ref.ssd_chunk_ref(xb, cum, Bm, Cm)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=tol,
+                               rtol=tol)
+
+
+def test_ssd_kernel_consistent_with_model_ssd():
+    """The kernel's chunk math must match repro.models.mamba.ssd_chunked
+    when the sequence is one chunk long."""
+    from repro.models.mamba import ssd_chunked
+    B, S, H, P, N = 2, 64, 2, 16, 8
+    xb = jnp.asarray(RNG.standard_normal((B, S, H, P)) * 0.1, jnp.float32)
+    la = jnp.asarray(-np.abs(RNG.standard_normal((B, S, H))) * 0.05,
+                     jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((B, S, N)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(RNG.standard_normal((B, S, N)) * 0.3, jnp.float32)
+    y_model, state_model = ssd_chunked(xb, la, Bm, Cm, chunk=S)
+    cum = jnp.cumsum(la, axis=1)
+    y_k, state_k = ssd_chunk_dual(xb, cum, Bm, Cm, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_k),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state_model), np.asarray(state_k),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,95 @@
+"""Property-based tests (hypothesis) on the engine's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine
+from repro.core.graph import CSRGraph, INF
+from repro.core.node_split import find_mdt, split_graph
+from repro.core.worklist import bucket, run_fill
+from repro.moe.balancing import calibrate_capacity
+
+import jax.numpy as jnp
+
+
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(2, 40))
+    m = draw(st.integers(1, 160))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if len(src) == 0:
+        src, dst = np.array([0]), np.array([1])
+    wt = rng.integers(1, 20, len(src))
+    return CSRGraph.from_edges(src, dst, wt, n, dedup=True)
+
+
+@given(random_graph(), st.sampled_from(["BS", "EP", "WD", "NS", "HP"]))
+@settings(max_examples=15, deadline=None)
+def test_all_strategies_equal_dijkstra(g, strategy):
+    ref = engine.reference_distances(g, 0)
+    strat = engine.make_strategy(strategy)
+    res = engine.run(g, 0, strat)
+    np.testing.assert_array_equal(res.dist, ref)
+
+
+@given(random_graph(), st.integers(1, 7))
+@settings(max_examples=25, deadline=None)
+def test_node_split_invariants(g, mdt):
+    """Splitting preserves edges exactly and bounds every outdegree."""
+    sg = split_graph(g, mdt)
+    g2 = sg.graph
+    assert g2.num_edges == g.num_edges
+    deg2 = np.asarray(g2.degrees)
+    assert deg2.max(initial=0) <= mdt
+    # multiset of (parent, dst, wt) is preserved
+    parent = np.asarray(sg.child_parent)
+    src2 = np.repeat(np.arange(g2.num_nodes), deg2)
+    orig_src = parent[src2]
+    row_ptr = np.asarray(g.row_ptr)
+    deg1 = row_ptr[1:] - row_ptr[:-1]
+    src1 = np.repeat(np.arange(g.num_nodes), deg1)
+    e1 = sorted(zip(src1, np.asarray(g.col), np.asarray(g.wt)))
+    e2 = sorted(zip(orig_src, np.asarray(g2.col), np.asarray(g2.wt)))
+    assert e1 == e2
+
+
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=50),
+       st.integers(1, 12))
+@settings(max_examples=40, deadline=None)
+def test_find_mdt_bounds(degrees, bins):
+    deg = np.array(degrees)
+    mdt = find_mdt(deg, bins)
+    assert 1 <= mdt <= max(int(deg.max(initial=1)), 1)
+    cap = calibrate_capacity(deg, bins)        # MoE twin of the heuristic
+    assert 1 <= cap <= max(int(deg.max(initial=1)), 1)
+
+
+@given(st.lists(st.tuples(st.integers(0, 100), st.integers(0, 9)),
+                min_size=1, max_size=30))
+@settings(max_examples=40, deadline=None)
+def test_run_fill_matches_concat(pairs):
+    """run_fill == explicit python concatenation of the runs."""
+    starts = np.array([p[0] for p in pairs], np.int32)
+    lens = np.array([p[1] for p in pairs], np.int32)
+    total = int(lens.sum())
+    cap = bucket(max(total, 1))
+    vals, valid = run_fill(jnp.asarray(starts), jnp.asarray(lens),
+                           jnp.int32(total), cap)
+    expect = np.concatenate(
+        [np.arange(s, s + l) for s, l in zip(starts, lens)]
+    ) if total else np.zeros(0, np.int64)
+    got = np.asarray(vals)[np.asarray(valid)]
+    np.testing.assert_array_equal(got, expect)
+
+
+@given(st.integers(0, 10 ** 7))
+@settings(max_examples=50, deadline=None)
+def test_bucket_properties(n):
+    b = bucket(n)
+    assert b >= max(n, 1)
+    assert b & (b - 1) == 0          # power of two
+    assert b < 2 * max(n, 256)
