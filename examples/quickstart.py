@@ -1,9 +1,14 @@
 """Quickstart: the paper in one script.
 
 Runs SSSP on a skewed RMAT graph under all five load-balancing strategies
-(BS/EP/WD/NS/HP), validates every result against a host Dijkstra oracle,
-and prints the per-strategy time/memory/balance trade-off table
-(paper Figs. 7/9 in miniature).
+(BS/EP/WD/NS/HP) plus the adaptive AD selector, validates every result
+against a host Dijkstra oracle, and prints the per-strategy
+time/memory/balance trade-off table (paper Figs. 7/9 in miniature).
+
+Times include jit compilation (no warm-up), and strategies sharing
+kernels benefit from earlier rows' compile cache — AD, which runs last,
+reuses BS/WD/HP kernels.  For warmed, best-of-N timings use the
+benchmark suite (see docs/benchmarks.md).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -27,9 +32,10 @@ def main():
               f"{'overhead_ms':>12} {'iters':>6} {'MTEPS':>7} "
               f"{'state_MB':>9} {'correct':>8}")
     print(header)
-    for name in ["BS", "EP", "WD", "NS", "HP"]:
+    for name in ["BS", "EP", "WD", "NS", "HP", "AD"]:
         strat = engine.make_strategy(name)
-        res = engine.run(g, source, strat)
+        # record_degrees so every strategy counts edges → comparable MTEPS
+        res = engine.run(g, source, strat, record_degrees=True)
         ok = bool(np.array_equal(res.dist, ref))
         print(f"{name:>8} {res.total_seconds*1e3:9.1f} "
               f"{res.kernel_seconds*1e3:10.1f} "

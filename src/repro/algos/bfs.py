@@ -8,14 +8,25 @@ distributivity property edge-based parallelism requires (§II-B).
 
 from __future__ import annotations
 
-from repro.core.engine import RunResult, make_strategy, run
+from repro.core.engine import RunResult, make_strategy, run, run_batch
 from repro.core.graph import CSRGraph
+from repro.core.multi_source import BatchRunResult
+
+
+def _unweighted(graph: CSRGraph) -> CSRGraph:
+    if graph.wt is None:
+        return graph
+    return CSRGraph(graph.row_ptr, graph.col, None,
+                    graph.num_nodes, graph.num_edges, graph.max_degree)
 
 
 def bfs(graph: CSRGraph, source: int = 0, strategy: str = "WD",
         record_degrees: bool = False, **strategy_kwargs) -> RunResult:
-    if graph.wt is not None:
-        graph = CSRGraph(graph.row_ptr, graph.col, None,
-                         graph.num_nodes, graph.num_edges, graph.max_degree)
     strat = make_strategy(strategy, **strategy_kwargs)
-    return run(graph, source, strat, record_degrees=record_degrees)
+    return run(_unweighted(graph), source, strat,
+               record_degrees=record_degrees)
+
+
+def bfs_batch(graph: CSRGraph, sources) -> BatchRunResult:
+    """Level-propagate from K sources concurrently (dist is ``[K, N]``)."""
+    return run_batch(_unweighted(graph), sources)

@@ -5,8 +5,9 @@ add + compare + scatter-min, so load balancing pays off most here
 
 from __future__ import annotations
 
-from repro.core.engine import RunResult, make_strategy, run
+from repro.core.engine import RunResult, make_strategy, run, run_batch
 from repro.core.graph import CSRGraph
+from repro.core.multi_source import BatchRunResult
 
 
 def sssp(graph: CSRGraph, source: int = 0, strategy: str = "WD",
@@ -14,3 +15,9 @@ def sssp(graph: CSRGraph, source: int = 0, strategy: str = "WD",
     assert graph.wt is not None, "SSSP needs a weighted graph"
     strat = make_strategy(strategy, **strategy_kwargs)
     return run(graph, source, strat, record_degrees=record_degrees)
+
+
+def sssp_batch(graph: CSRGraph, sources) -> BatchRunResult:
+    """Shortest paths from K sources concurrently (dist is ``[K, N]``)."""
+    assert graph.wt is not None, "SSSP needs a weighted graph"
+    return run_batch(graph, sources)

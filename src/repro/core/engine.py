@@ -1,8 +1,10 @@
 """Data-driven execution engine (paper Fig. 2 / Fig. 4 outer loop).
 
 Runs a relax-style propagation algorithm (BFS level / SSSP distance) to a
-fixed point under any of the five load-balancing strategies, collecting
-per-iteration statistics used by the benchmarks and the balance analysis.
+fixed point under any registered load-balancing strategy (the paper's five
+plus the adaptive AD), collecting per-iteration statistics used by the
+benchmarks and the balance analysis.  Batched multi-source execution lives
+in :mod:`repro.core.multi_source` and is exposed here as :func:`run_batch`.
 """
 
 from __future__ import annotations
@@ -17,7 +19,8 @@ import numpy as np
 
 from repro.core.graph import CSRGraph, INF
 from repro.core.strategies import (
-    EdgeBased, IterStats, NodeSplitting, StrategyBase, STRATEGIES)
+    EdgeBased, IterStats, NodeSplitting, StrategyBase, STRATEGIES,
+    make_strategy, register)
 
 
 @dataclasses.dataclass
@@ -114,8 +117,14 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         state_bytes=strategy.state_bytes(state))
 
 
-def make_strategy(name: str, **kwargs) -> StrategyBase:
-    return STRATEGIES[name](**kwargs)
+def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000):
+    """Run K sources concurrently against one graph (dist is ``[K, N]``).
+
+    Thin wrapper over :func:`repro.core.multi_source.run_batch`; kept here
+    so single-source and batched entry points live side by side."""
+    from repro.core import multi_source
+    return multi_source.run_batch(graph, sources,
+                                  max_iterations=max_iterations)
 
 
 def reference_distances(graph: CSRGraph, source: int) -> np.ndarray:

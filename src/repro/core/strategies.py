@@ -1,4 +1,4 @@
-"""The five load-balancing strategies (paper §II–III), adapted to TPU/JAX.
+"""The load-balancing strategies (paper §II–III), adapted to TPU/JAX.
 
 Strategy        unit of work                     graph format
 --------        ------------                     ------------
@@ -10,6 +10,11 @@ NS  (node       node, after splitting deg>MDT    CSR (rebuilt host-side)
      split)     nodes into ⌈deg/MDT⌉ children
 HP  (hier.)     ≤MDT edges/node/sub-iteration;   CSR
                 hybrid fallback to WD
+AD  (adaptive)  per-iteration choice of BS/WD/HP CSR
+                from frontier statistics (arXiv:1911.09135)
+
+Strategies live in the :data:`STRATEGIES` registry; new ones are added with
+the :func:`register` decorator and instantiated via :func:`make_strategy`.
 
 CUDA-thread semantics map to dense vectorized batches:
   * atomicMin(dist[d], alt)  →  dist.at[d].min(alt)        (scatter-min)
@@ -33,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import node_split
+from repro.core import balance, node_split
 from repro.core.graph import CSRGraph, COOGraph, INF
 from repro.core.worklist import bucket, compact_mask, run_fill
 
@@ -241,6 +246,7 @@ class IterStats:
     edges_processed: int
     sub_iterations: int = 1
     frontier_degrees: Optional[np.ndarray] = None  # for balance analysis
+    kernel: Optional[str] = None     # relax kernel used (AD records choices)
 
 
 class StrategyBase:
@@ -260,6 +266,37 @@ class StrategyBase:
         raise NotImplementedError
 
 
+#: name -> strategy class.  Populated by :func:`register`; drivers resolve
+#: user-facing strategy names ("BS", ..., "AD") through this table.
+STRATEGIES: dict[str, type] = {}
+
+
+def register(cls=None, *, name: Optional[str] = None):
+    """Class decorator adding a :class:`StrategyBase` subclass to the
+    registry under ``name`` (default: the class's ``name`` attribute)."""
+    def _register(c):
+        if not (isinstance(c, type) and issubclass(c, StrategyBase)):
+            raise TypeError(f"{c!r} is not a StrategyBase subclass")
+        key = name or c.name
+        if key in STRATEGIES:
+            raise ValueError(f"strategy {key!r} already registered "
+                             f"({STRATEGIES[key]!r})")
+        STRATEGIES[key] = c
+        return c
+    return _register(cls) if cls is not None else _register
+
+
+def make_strategy(name: str, **kwargs) -> StrategyBase:
+    """Instantiate a registered strategy by name."""
+    try:
+        cls = STRATEGIES[name]
+    except KeyError:
+        raise KeyError(f"unknown strategy {name!r}; registered: "
+                       f"{sorted(STRATEGIES)}") from None
+    return cls(**kwargs)
+
+
+@register
 class NodeBased(StrategyBase):
     name = "BS"
 
@@ -271,6 +308,7 @@ class NodeBased(StrategyBase):
         return dist, new_mask, stats
 
 
+@register
 class EdgeBased(StrategyBase):
     """EP.  State = COO graph (+ the 2E/3E memory bill) + edge worklist."""
     name = "EP"
@@ -331,6 +369,7 @@ class EdgeBased(StrategyBase):
         return dist, new_mask, wl, total
 
 
+@register
 class WorkloadDecomposition(StrategyBase):
     name = "WD"
 
@@ -341,11 +380,15 @@ class WorkloadDecomposition(StrategyBase):
         self._degrees = np.asarray(graph.degrees)
         return graph
 
-    def iterate(self, g, dist, updated_mask, count, *, record_degrees=False):
+    def iterate(self, g, dist, updated_mask, count, *, record_degrees=False,
+                edge_total=None):
         cap = bucket(count)
         frontier = compact_mask(updated_mask, cap)
         stats = _frontier_stats(g, frontier, count, record_degrees)
-        total = int(self._degrees[np.asarray(updated_mask)].sum())
+        # edge_total lets callers that already synced the mask (AD) skip
+        # the second device-to-host transfer + gather
+        total = (int(self._degrees[np.asarray(updated_mask)].sum())
+                 if edge_total is None else int(edge_total))
         cursor = jnp.zeros((cap,), jnp.int32)
         dist, new_mask = wd_relax(g, dist, frontier, cursor,
                                   cap_work=bucket(total),
@@ -354,6 +397,7 @@ class WorkloadDecomposition(StrategyBase):
         return dist, new_mask, stats
 
 
+@register
 class NodeSplitting(StrategyBase):
     name = "NS"
 
@@ -383,6 +427,7 @@ class NodeSplitting(StrategyBase):
         return sg.graph.device_bytes() + sg.child_parent.size * 4
 
 
+@register
 class HierarchicalProcessing(StrategyBase):
     name = "HP"
 
@@ -454,10 +499,92 @@ def _frontier_stats(g, frontier, count, record_degrees) -> IterStats:
     return stats
 
 
-STRATEGIES = {
-    "BS": NodeBased,
-    "EP": EdgeBased,
-    "WD": WorkloadDecomposition,
-    "NS": NodeSplitting,
-    "HP": HierarchicalProcessing,
-}
+# ---------------------------------------------------------------------------
+# AD — adaptive strategy selection (Jatala et al., arXiv:1911.09135)
+# ---------------------------------------------------------------------------
+
+def choose_kernel(count: int, degree_sum: int, max_degree: int,
+                  imbalance: float, *, mdt: int,
+                  small_frontier: int = 512,
+                  imbalance_threshold: float = 4.0,
+                  hp_edges_threshold: int = 1 << 15) -> str:
+    """Pick the relax kernel for one iteration from frontier statistics.
+
+    The decision structure follows arXiv:1911.09135 (which switches load
+    balancers at runtime from frontier size and degree distribution):
+
+    * small or near-uniform frontier → BS: the per-node loop has zero
+      scan/search overhead and its imbalance penalty is bounded by the
+      frontier's own degree spread;
+    * large skewed frontier with edge volume past ``hp_edges_threshold``
+      and nodes exceeding MDT → HP: bound per-node work to MDT per
+      sub-iteration so one hub cannot serialize the whole tile;
+    * everything else → WD: merge-path edge distribution, perfectly
+      balanced at the cost of a prefix-sum + binary search per iteration.
+    """
+    if degree_sum == 0 or count == 0:
+        return "BS"
+    if count <= small_frontier and imbalance <= imbalance_threshold:
+        return "BS"
+    if max_degree > mdt and degree_sum >= hp_edges_threshold:
+        return "HP"
+    return "WD"
+
+
+@register
+class AdaptiveStrategy(StrategyBase):
+    """AD: per-iteration strategy switching on frontier statistics.
+
+    Keeps BS, WD and HP sub-strategies warm against the same CSR state and
+    delegates each frontier iteration to whichever kernel
+    :func:`choose_kernel` selects from the statistics
+    ``repro.core.balance`` derives (frontier size, degree sum, imbalance
+    factor).  All three kernels share the ``dist`` layout, so switching
+    mid-run is free — no state conversion between iterations (the property
+    arXiv:1911.09135 exploits).
+    """
+    name = "AD"
+
+    def __init__(self, small_frontier: int = 512,
+                 imbalance_threshold: float = 4.0,
+                 hp_edges_threshold: int = 1 << 15,
+                 histogram_bins: int = 10, mdt: Optional[int] = None):
+        self.small_frontier = small_frontier
+        self.imbalance_threshold = imbalance_threshold
+        self.hp_edges_threshold = hp_edges_threshold
+        self.histogram_bins = histogram_bins
+        self.mdt = mdt
+        self.kernel_counts: dict[str, int] = {}
+
+    def setup(self, graph: CSRGraph):
+        self._degrees = np.asarray(graph.degrees)
+        self.mdt_value = self.mdt or node_split.find_mdt(
+            self._degrees, self.histogram_bins)
+        self._kernels = {
+            "BS": NodeBased(),
+            "WD": WorkloadDecomposition(),
+            "HP": HierarchicalProcessing(mdt=self.mdt_value),
+        }
+        for k in self._kernels.values():
+            k.setup(graph)
+        self.kernel_counts = {}
+        return graph
+
+    def iterate(self, g, dist, updated_mask, count, *, record_degrees=False):
+        fdeg = self._degrees[np.asarray(updated_mask)]
+        report = balance.analyze("BS", fdeg)
+        choice = choose_kernel(
+            int(count), report.useful, int(fdeg.max(initial=0)),
+            report.imbalance_factor, mdt=self.mdt_value,
+            small_frontier=self.small_frontier,
+            imbalance_threshold=self.imbalance_threshold,
+            hp_edges_threshold=self.hp_edges_threshold)
+        self.kernel_counts[choice] = self.kernel_counts.get(choice, 0) + 1
+        extra = {"edge_total": report.useful} if choice == "WD" else {}
+        dist, new_mask, stats = self._kernels[choice].iterate(
+            g, dist, updated_mask, count, record_degrees=record_degrees,
+            **extra)
+        stats.kernel = choice
+        if stats.edges_processed == 0:
+            stats.edges_processed = report.useful
+        return dist, new_mask, stats

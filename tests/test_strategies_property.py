@@ -1,7 +1,10 @@
 """Property-based tests (hypothesis) on the engine's invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import engine
 from repro.core.graph import CSRGraph, INF
