@@ -44,8 +44,13 @@ def get_graph(name: str, weighted: bool):
 
 def run_strategy(graph, strategy_name: str, *, source: int | None = None,
                  repeats: int = 2, record_degrees: bool = False,
-                 **kwargs) -> engine.RunResult:
+                 mode: str = "stepped", **kwargs) -> engine.RunResult:
     """Warm-up run (jit compile) + best-of-N timed runs.
+
+    The warm-up run is never a best-of candidate (its timings carry
+    compilation), and candidates are ranked by ``traversal_seconds`` —
+    the same setup-free clock ``RunResult.mteps`` reports — so one-off
+    strategy prep (NS morph, EP COO conversion) doesn't pick the winner.
 
     Default source = highest-outdegree node (inside the giant component —
     Graph500 practice; node 0 of a label-permuted Kronecker graph may
@@ -55,15 +60,14 @@ def run_strategy(graph, strategy_name: str, *, source: int | None = None,
     if strategy_name == "EP":
         kwargs.setdefault("memory_budget_bytes", EP_MEMORY_BUDGET)
     best = None
-    for _ in range(repeats + 1):
+    for i in range(repeats + 1):
         strat = engine.make_strategy(strategy_name, **kwargs)
         res = engine.run(graph, source, strat,
-                         record_degrees=record_degrees)
-        if best is None or res.total_seconds < best.total_seconds:
-            if best is not None:          # skip warm-up as best candidate?
-                best = res
-            else:
-                best = res
+                         record_degrees=record_degrees, mode=mode)
+        if i == 0:
+            continue                      # warm-up: compile time pollutes
+        if best is None or res.traversal_seconds < best.traversal_seconds:
+            best = res
     return best
 
 

@@ -37,9 +37,7 @@ def run(verbose: bool = True):
         g = get_graph(gname, weighted=True)
         for s in FIXED + ["AD"]:
             try:
-                # record_degrees so every strategy reports true MTEPS (BS/NS
-                # don't count edges otherwise)
-                res = run_strategy(g, s, record_degrees=True)
+                res = run_strategy(g, s)
                 row = {"graph": gname, "strategy": s, "status": "ok",
                        "total_s": res.total_seconds,
                        "iterations": res.iterations,

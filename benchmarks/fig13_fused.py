@@ -1,0 +1,98 @@
+"""Fig. 13 (extension): fused single-dispatch vs stepped per-iteration
+execution — the kernel-vs-dispatch-overhead split made measurable.
+
+The stepped engine re-dispatches a freshly bucketed jit specialization
+every frontier iteration and syncs the frontier count to the host in
+between; on small frontiers that dispatch latency dominates measured
+MTEPS (exactly the overhead axis of the paper's Fig. 8–11 analysis).
+``mode="fused"`` removes it by running the whole traversal as one
+``lax.while_loop`` dispatch.  This module measures both modes per
+strategy per graph family and reports:
+
+* MTEPS per mode (setup excluded — ``RunResult.mteps``);
+* the fused/stepped speedup;
+* stepped mode's *dispatch-overhead share*: the fraction of traversal
+  time outside the timed ``iterate`` calls.  This is a **lower bound**
+  on the host overhead the fused engine removes: the stepped engine's
+  kernel timer wraps the whole ``strategy.iterate`` call, so host work
+  *inside* it (frontier compaction dispatch, capacity bucketing, AD's
+  statistics sync) is booked as kernel time, and only the between-call
+  mask-count sync + driver loop land in the share reported here.
+
+Every run also asserts fused distances and iteration counts are
+bit-identical to stepped (the serving path may not drift).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, run_strategy, save_result
+from repro.data import graph500_graph, rmat_graph, road_grid_graph
+
+#: one power-law, one Kronecker, one bounded-degree family (paper suite).
+#: Sized below the main-suite graphs on purpose: the quantity under test
+#: is per-iteration dispatch overhead, which is scale-independent, while
+#: the fused mode's capacity-padded lanes are O(E) *serialized* work on
+#: the CPU backend — at main-suite sizes that padding swamps the dispatch
+#: signal (and the runtime) without adding information.
+FIG13_GRAPHS = {
+    "rmat": lambda: rmat_graph(scale=11, edge_factor=8, weighted=True,
+                               seed=7),
+    "graph500": lambda: graph500_graph(scale=12, edge_factor=16,
+                                       weighted=True, seed=11),
+    "road": lambda: road_grid_graph(side=64, weighted=True, seed=7),
+}
+#: the CSR strategies with fused lowerings exercised here (EP's COO and
+#: NS's split graph add memory axes fig9 already covers)
+FIG13_STRATEGIES = ["BS", "WD", "HP", "AD"]
+
+
+def run(verbose: bool = True):
+    rows = []
+    for gname, make in FIG13_GRAPHS.items():
+        g = make()
+        for s in FIG13_STRATEGIES:
+            stepped = run_strategy(g, s, mode="stepped")
+            fused = run_strategy(g, s, mode="fused")
+            np.testing.assert_array_equal(
+                fused.dist, stepped.dist,
+                err_msg=f"fused dist diverged for {s} on {gname}")
+            assert fused.iterations == stepped.iterations, (
+                f"fused iterations diverged for {s} on {gname}")
+            assert fused.edges_relaxed == stepped.edges_relaxed, (
+                f"fused edge total diverged for {s} on {gname}")
+            dispatch_share = (
+                (stepped.traversal_seconds - stepped.kernel_seconds)
+                / stepped.traversal_seconds
+                if stepped.traversal_seconds > 0 else 0.0)
+            rows.append({
+                "graph": gname, "strategy": s,
+                "iterations": stepped.iterations,
+                "edges_relaxed": fused.edges_relaxed,
+                "stepped_s": stepped.traversal_seconds,
+                "fused_s": fused.traversal_seconds,
+                "mteps_stepped": stepped.mteps,
+                "mteps_fused": fused.mteps,
+                "speedup": (stepped.traversal_seconds / fused.traversal_seconds
+                            if fused.traversal_seconds > 0 else 0.0),
+                "stepped_dispatch_share": dispatch_share,
+            })
+
+    save_result("fig13_fused", {"rows": rows})
+    lines = []
+    for r in rows:
+        derived = (f"mteps_fused={r['mteps_fused']:.2f};"
+                   f"mteps_stepped={r['mteps_stepped']:.2f};"
+                   f"speedup={r['speedup']:.2f}x;"
+                   f"stepped_dispatch_share={r['stepped_dispatch_share']:.2f}")
+        lines.append(csv_line(
+            f"fig13_fused/{r['graph']}/{r['strategy']}",
+            r["fused_s"] * 1e6, derived))
+    if verbose:
+        print("\n".join(lines))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -6,8 +6,8 @@ import sys
 
 def main() -> None:
     from benchmarks import (fig7_sssp, fig8_bfs, fig9_tradeoffs, fig10_ns,
-                            fig11_chunking, fig12_adaptive, table2_graphs,
-                            moe_balance, lm_step)
+                            fig11_chunking, fig12_adaptive, fig13_fused,
+                            table2_graphs, moe_balance, lm_step)
     modules = [
         ("table2_graphs", table2_graphs),
         ("fig7_sssp", fig7_sssp),
@@ -16,6 +16,7 @@ def main() -> None:
         ("fig10_ns", fig10_ns),
         ("fig11_chunking", fig11_chunking),
         ("fig12_adaptive", fig12_adaptive),
+        ("fig13_fused", fig13_fused),
         ("moe_balance", moe_balance),
         ("lm_step", lm_step),
     ]

@@ -34,8 +34,7 @@ def main():
     print(header)
     for name in ["BS", "EP", "WD", "NS", "HP", "AD"]:
         strat = engine.make_strategy(name)
-        # record_degrees so every strategy counts edges → comparable MTEPS
-        res = engine.run(g, source, strat, record_degrees=True)
+        res = engine.run(g, source, strat)
         ok = bool(np.array_equal(res.dist, ref))
         print(f"{name:>8} {res.total_seconds*1e3:9.1f} "
               f"{res.kernel_seconds*1e3:10.1f} "
@@ -43,6 +42,15 @@ def main():
               f"{res.mteps:7.2f} {res.state_bytes/2**20:9.2f} {ok!s:>8}")
         assert ok, f"{name} diverged from Dijkstra"
     print("\nall strategies agree with the Dijkstra oracle ✓")
+
+    # the same traversal as ONE device dispatch (docs/architecture.md):
+    # no per-iteration host round-trips, bit-identical distances
+    warm = engine.run(g, source, engine.make_strategy("AD"), mode="fused")
+    res = engine.run(g, source, engine.make_strategy("AD"), mode="fused")
+    assert np.array_equal(res.dist, ref) and np.array_equal(warm.dist, ref)
+    print(f"\nfused AD (single dispatch, warmed): "
+          f"{res.total_seconds*1e3:.1f} ms, {res.mteps:.2f} MTEPS, "
+          f"kernels={res.iterations} iterations in 1 dispatch")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,14 @@ harvested and the next pending query is admitted into that slot with
 ``multi_source.refill_slot``, without disturbing the in-flight queries in
 the other slots.
 
+Execution-model note (docs/architecture.md): continuous batching is
+inherently host-STEPPED — harvesting converged slots and admitting new
+queries requires inspecting the mask between iterations, so this loop
+uses the per-iteration ``batched_wd_relax`` dispatch.  For a *fixed*
+batch with no mid-flight admission, ``engine.run_batch(...,
+mode="fused")`` runs all K queries to their fixed points in a single
+device dispatch instead.
+
     PYTHONPATH=src python examples/serve_graph_queries.py \
         --queries 12 --slots 4 --graph rmat --algo sssp
 """

@@ -21,12 +21,16 @@ def _unweighted(graph: CSRGraph) -> CSRGraph:
 
 
 def bfs(graph: CSRGraph, source: int = 0, strategy: str = "WD",
-        record_degrees: bool = False, **strategy_kwargs) -> RunResult:
+        record_degrees: bool = False, mode: str = "stepped",
+        **strategy_kwargs) -> RunResult:
+    """``mode="fused"`` runs the traversal as one device dispatch (see
+    :mod:`repro.core.fused`); ``"stepped"`` keeps per-iteration stats."""
     strat = make_strategy(strategy, **strategy_kwargs)
     return run(_unweighted(graph), source, strat,
-               record_degrees=record_degrees)
+               record_degrees=record_degrees, mode=mode)
 
 
-def bfs_batch(graph: CSRGraph, sources) -> BatchRunResult:
+def bfs_batch(graph: CSRGraph, sources,
+              mode: str = "stepped") -> BatchRunResult:
     """Level-propagate from K sources concurrently (dist is ``[K, N]``)."""
-    return run_batch(_unweighted(graph), sources)
+    return run_batch(_unweighted(graph), sources, mode=mode)

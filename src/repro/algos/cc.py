@@ -1,12 +1,25 @@
 """Connected components by label propagation — a third application showing
 the strategies are algorithm-agnostic (the engine relaxes min-labels over
-edges exactly like SSSP with zero weights from a virtual multi-source)."""
+edges exactly like SSSP with zero weights from a virtual multi-source).
+
+The trick: initialize ``dist[v] = v`` (every node its own label), activate
+*every* node, and relax over a zero-weight copy of the graph.  The
+scatter-min relax then propagates the minimum reachable node id instead of
+a distance, and the fixed point assigns each node the min label of its
+component.  On a symmetric (undirected) graph that is exactly connected
+components; on a directed graph it is the min id over nodes that can reach
+``v``.  See docs/algorithms.md.
+
+``mode="fused"`` runs the propagation as one device dispatch via
+:mod:`repro.core.fused`; ``"stepped"`` keeps the host-driven loop.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import fused as _fused
 from repro.core.engine import _ready, make_strategy
 from repro.core.graph import CSRGraph, INF
 from repro.core.strategies import EdgeBased
@@ -14,8 +27,12 @@ from repro.core.strategies import EdgeBased
 
 def connected_components(graph: CSRGraph, strategy: str = "WD",
                          max_iterations: int = 10000,
+                         mode: str = "stepped",
                          **strategy_kwargs) -> np.ndarray:
     """Returns the min-node-id label of each node's (out-)component."""
+    if mode not in ("stepped", "fused"):
+        raise ValueError(
+            f"mode must be 'stepped' or 'fused', got {mode!r}")
     strat = make_strategy(strategy, **strategy_kwargs)
     if isinstance(strat, EdgeBased):
         raise ValueError("cc uses multi-source init; use a node strategy")
@@ -33,12 +50,16 @@ def connected_components(graph: CSRGraph, strategy: str = "WD",
         dist = dist.at[graph.num_nodes:].set(
             strat.split_info.child_parent[graph.num_nodes:])
     mask = jnp.ones((n_alloc,), jnp.bool_)
-    count, it = n_alloc, 0
-    while count > 0 and it < max_iterations:
-        dist, mask, _ = strat.iterate(state, dist, mask, count)
-        _ready(dist)
-        count = int(jnp.sum(mask))
-        it += 1
+    if mode == "fused":
+        dist, _, _ = _fused.run_fixed_point(
+            g, state, strat, dist, mask, max_iterations=max_iterations)
+    else:
+        count, it = n_alloc, 0
+        while count > 0 and it < max_iterations:
+            dist, mask, _ = strat.iterate(state, dist, mask, count)
+            _ready(dist)
+            count = int(jnp.sum(mask))
+            it += 1
     if strategy == "NS":
         dist = strat.split_info.extract_original(dist)
     return np.asarray(dist)

@@ -11,13 +11,18 @@ from repro.core.multi_source import BatchRunResult
 
 
 def sssp(graph: CSRGraph, source: int = 0, strategy: str = "WD",
-         record_degrees: bool = False, **strategy_kwargs) -> RunResult:
+         record_degrees: bool = False, mode: str = "stepped",
+         **strategy_kwargs) -> RunResult:
+    """``mode="fused"`` runs the traversal as one device dispatch (see
+    :mod:`repro.core.fused`); ``"stepped"`` keeps per-iteration stats."""
     assert graph.wt is not None, "SSSP needs a weighted graph"
     strat = make_strategy(strategy, **strategy_kwargs)
-    return run(graph, source, strat, record_degrees=record_degrees)
+    return run(graph, source, strat, record_degrees=record_degrees,
+               mode=mode)
 
 
-def sssp_batch(graph: CSRGraph, sources) -> BatchRunResult:
+def sssp_batch(graph: CSRGraph, sources,
+               mode: str = "stepped") -> BatchRunResult:
     """Shortest paths from K sources concurrently (dist is ``[K, N]``)."""
     assert graph.wt is not None, "SSSP needs a weighted graph"
-    return run_batch(graph, sources)
+    return run_batch(graph, sources, mode=mode)

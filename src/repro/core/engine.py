@@ -2,9 +2,21 @@
 
 Runs a relax-style propagation algorithm (BFS level / SSSP distance) to a
 fixed point under any registered load-balancing strategy (the paper's five
-plus the adaptive AD), collecting per-iteration statistics used by the
-benchmarks and the balance analysis.  Batched multi-source execution lives
-in :mod:`repro.core.multi_source` and is exposed here as :func:`run_batch`.
+plus the adaptive AD).  Two execution modes (see docs/architecture.md for
+the dispatch-timeline picture):
+
+* ``mode="stepped"`` (default) — one jit dispatch per frontier iteration,
+  with the frontier counted/compacted on the host between dispatches.
+  This is the stats-rich path: per-iteration :class:`IterStats`,
+  ``record_degrees`` for the balance analysis, kernel/overhead time split.
+* ``mode="fused"`` — the whole traversal as **one** ``lax.while_loop``
+  dispatch (:mod:`repro.core.fused`): no host round-trips, so dispatch
+  latency stops polluting MTEPS.  Distances, iteration counts and edge
+  totals are bit-identical to stepped mode; per-iteration stats are not
+  collected (``iter_stats`` is empty).
+
+Batched multi-source execution lives in :mod:`repro.core.multi_source`
+and is exposed here as :func:`run_batch` (same two modes).
 """
 
 from __future__ import annotations
@@ -17,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import fused as _fused
 from repro.core.graph import CSRGraph, INF
 from repro.core.strategies import (
     EdgeBased, IterStats, NodeSplitting, StrategyBase, STRATEGIES,
@@ -35,9 +48,27 @@ class RunResult:
     iter_stats: list
     strategy: str
     state_bytes: int                 # device bytes held by the strategy
+    mode: str = "stepped"            # "stepped" or "fused"
+
+    @property
+    def traversal_seconds(self) -> float:
+        """Time spent in the fixed-point loop, excluding one-off strategy
+        setup (NS graph morph, EP COO conversion, ...)."""
+        return max(self.total_seconds - self.setup_seconds, 0.0)
 
     @property
     def mteps(self) -> float:
+        """Millions of traversed edges per second of *traversal* time.
+
+        Setup is excluded so fused/stepped (and per-strategy) comparisons
+        aren't skewed by one-off prep; use :attr:`mteps_with_setup` for
+        the end-to-end figure."""
+        if self.traversal_seconds <= 0:
+            return 0.0
+        return self.edges_relaxed / self.traversal_seconds / 1e6
+
+    @property
+    def mteps_with_setup(self) -> float:
         if self.total_seconds <= 0:
             return 0.0
         return self.edges_relaxed / self.total_seconds / 1e6
@@ -50,8 +81,22 @@ def _ready(x):
 
 def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         max_iterations: int = 100000, record_degrees: bool = False,
-        ) -> RunResult:
-    """Fixed-point driver.  ``graph.wt is None`` ⇒ BFS levels, else SSSP."""
+        mode: str = "stepped") -> RunResult:
+    """Fixed-point driver.  ``graph.wt is None`` ⇒ BFS levels, else SSSP.
+
+    ``mode="stepped"`` dispatches one jitted relax per frontier iteration
+    and collects per-iteration stats; ``mode="fused"`` runs the whole
+    traversal as one on-device ``while_loop`` dispatch (same distances,
+    iteration count and edge total — see :mod:`repro.core.fused`).
+    ``record_degrees`` needs the host in the loop, so it requires stepped
+    mode."""
+    if mode not in ("stepped", "fused"):
+        raise ValueError(
+            f"mode must be 'stepped' or 'fused', got {mode!r}")
+    if mode == "fused" and record_degrees:
+        raise ValueError(
+            "record_degrees collects per-iteration host-side stats; "
+            "use mode='stepped'")
     if graph.num_edges == 0:        # degenerate: nothing to relax
         dist = np.full(graph.num_nodes, INF, np.int32)
         dist[source] = 0
@@ -59,7 +104,7 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
                          setup_seconds=0.0, kernel_seconds=0.0,
                          overhead_seconds=0.0, edges_relaxed=0,
                          iter_stats=[], strategy=strategy.name,
-                         state_bytes=0)
+                         state_bytes=0, mode=mode)
     t0 = time.perf_counter()
     state = strategy.setup(graph)
     _ready(jax.tree_util.tree_leaves(state))
@@ -71,6 +116,25 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         n_alloc = graph.num_nodes
 
     dist = jnp.full((n_alloc,), INF, jnp.int32).at[source].set(0)
+
+    if mode == "fused":
+        mask = jnp.zeros((n_alloc,), jnp.bool_).at[source].set(True)
+        t_start = time.perf_counter()
+        dist, iterations, edges = _fused.run_fixed_point(
+            graph, state, strategy, dist, mask,
+            max_iterations=max_iterations)
+        total_s = time.perf_counter() - t_start
+        if isinstance(strategy, NodeSplitting):
+            dist = strategy.split_info.extract_original(dist)
+        # one dispatch: the kernel/overhead split collapses — the whole
+        # traversal is kernel time, setup is the only host-side overhead
+        return RunResult(
+            dist=np.asarray(dist), iterations=iterations,
+            total_seconds=total_s + setup_s, setup_seconds=setup_s,
+            kernel_seconds=total_s, overhead_seconds=setup_s,
+            edges_relaxed=edges, iter_stats=[], strategy=strategy.name,
+            state_bytes=strategy.state_bytes(state), mode="fused")
+
     iter_stats: list[IterStats] = []
     kernel_s = 0.0
     edges = 0
@@ -81,13 +145,14 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         it = 0
         while count > 0 and it < max_iterations:
             tk = time.perf_counter()
+            relaxed = count          # worklist entries relaxed this round
             dist, new_mask, wl, count = strategy.relax_and_push(
                 state, dist, wl, count)
             _ready(dist)
             kernel_s += time.perf_counter() - tk
-            edges += count
-            iter_stats.append(IterStats(frontier_size=int(count),
-                                        edges_processed=int(count)))
+            edges += relaxed
+            iter_stats.append(IterStats(frontier_size=int(relaxed),
+                                        edges_processed=int(relaxed)))
             it += 1
     else:
         mask = jnp.zeros((n_alloc,), jnp.bool_).at[source].set(True)
@@ -114,17 +179,18 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         overhead_seconds=max(total_s - kernel_s, 0.0) + setup_s,
         edges_relaxed=int(edges), iter_stats=iter_stats,
         strategy=strategy.name,
-        state_bytes=strategy.state_bytes(state))
+        state_bytes=strategy.state_bytes(state), mode="stepped")
 
 
-def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000):
+def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
+              mode: str = "stepped"):
     """Run K sources concurrently against one graph (dist is ``[K, N]``).
 
     Thin wrapper over :func:`repro.core.multi_source.run_batch`; kept here
     so single-source and batched entry points live side by side."""
     from repro.core import multi_source
     return multi_source.run_batch(graph, sources,
-                                  max_iterations=max_iterations)
+                                  max_iterations=max_iterations, mode=mode)
 
 
 def reference_distances(graph: CSRGraph, source: int) -> np.ndarray:

@@ -1,0 +1,486 @@
+"""Fused on-device fixed-point engine: one dispatch per traversal.
+
+The stepped drivers in :mod:`repro.core.engine` pay a host round-trip per
+frontier iteration: sync ``count = int(jnp.sum(mask))``, compact the
+frontier on the host side of the jit boundary, pick a capacity bucket, and
+re-dispatch a freshly specialized kernel.  On small frontiers that
+dispatch latency — not relax work — dominates measured MTEPS, muddying the
+kernel-vs-overhead split the paper's Fig. 8–11 analysis depends on.
+
+This module runs an **entire** BFS/SSSP/CC traversal as a single
+``jax.lax.while_loop`` dispatch, the way Gunrock-style frameworks and the
+GPU load-balancing programming model of Osama et al. (arXiv:2301.04792)
+fuse the traversal into one device-resident loop:
+
+* the frontier is a dense ``[N]`` boolean mask — no host compaction, no
+  per-iteration capacity bucketing.  Work lanes are capacity-padded to the
+  graph's static shape (``[N]`` node lanes or ``[E]`` edge lanes) with
+  validity masks, so every shape inside the loop is fixed;
+* the loop condition is ``frontier_any & (it < max_iterations)``,
+  evaluated on device;
+* host-side ``nonzero``/``cumsum`` compaction is replaced by an on-device
+  prefix-sum over masked degrees + ``searchsorted`` (the same merge-path
+  structure as the stepped WD kernel);
+* the carry accumulates ``(iterations, edges_relaxed)`` so the resulting
+  :class:`repro.core.engine.RunResult` stays comparable with stepped runs.
+
+Every registered strategy has a fused lowering (see :func:`_plan`):
+
+========  =================================================================
+kernel    dense-mask semantics (chunk boundaries match the stepped driver,
+          so ``dist``/``iterations``/``edges_relaxed`` are bit-identical)
+========  =================================================================
+``BS``    all ``N`` lanes walk their adjacency list in lockstep edge
+          columns up to the frontier's max degree (non-frontier lanes
+          masked) — same per-column relax batches as ``bs_relax``
+``WD``    prefix-sum over masked degrees + searchsorted across ``E`` edge
+          lanes — the dense analogue of ``wd_relax``'s merge path
+``HP``    ``lax.cond`` hybrid: small frontiers take the WD path (as the
+          stepped driver does below ``switch_threshold``); large ones run
+          MDT-wide tiles in an inner ``while_loop`` plus a cursor-aware
+          WD tail — sub-iteration boundaries match ``hp_sub_relax``
+``EP``    all ``E`` edge lanes, valid where the edge's source is in the
+          frontier; the loop condition uses the frontier's *edge* total so
+          iteration counts match the edge-worklist driver
+``NS``    BS on the split graph, with the parent→child mirror
+          (``ns_activate`` semantics) folded into the loop body
+``AD``    evaluates :func:`repro.core.strategies.choose_kernel`'s decision
+          structure on device — frontier statistics (count, degree sum,
+          max degree, imbalance) feed a branch index into ``lax.switch``
+          over the BS/WD/HP bodies; kernel choices are tallied in the
+          carry and surfaced as ``AdaptiveStrategy.kernel_counts``
+========  =================================================================
+
+Dispatch accounting: :data:`DISPATCH_COUNTS` increments once per traversal
+(host side, per ``_fixed_point`` call) and :data:`TRACE_COUNTS` increments
+only while jit traces (i.e. per compilation).  Tests assert "exactly one
+dispatch per traversal, zero recompiles when shapes repeat" from these.
+
+Everything in this module is fused-safe: no ``int()``, ``np.asarray`` or
+other host syncs inside traced code.  Host-side statistics (per-iteration
+``IterStats``, ``record_degrees``, balance analysis) are deliberately out
+of scope — that is what stepped mode remains for.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from functools import partial
+from typing import Any, Optional
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.graph import CSRGraph
+from repro.core.strategies import (
+    AdaptiveStrategy, EdgeBased, HierarchicalProcessing, NodeBased,
+    NodeSplitting, WorkloadDecomposition, _apply_relax, _edge_weight)
+
+#: traversals started, per kernel — incremented once per fused fixed-point
+#: call on the host side.  ``DISPATCH_COUNTS[k]`` growing by exactly 1 per
+#: ``engine.run(mode="fused")`` is the "one dispatch per traversal" claim.
+DISPATCH_COUNTS: Counter = Counter()
+
+#: jit traces, per kernel — incremented inside the traced function, so it
+#: only moves when XLA (re)compiles.  Steady shapes ⇒ steady counts.
+TRACE_COUNTS: Counter = Counter()
+
+
+# ---------------------------------------------------------------------------
+# dense-mask relax steps.  Each maps (dist [N], mask [N]) -> (dist, new
+# frontier mask, edges relaxed this iteration) with static shapes only.
+# ---------------------------------------------------------------------------
+
+def _masked_degrees(g: CSRGraph, mask: jax.Array) -> jax.Array:
+    """Out-degree where the node is in the frontier, 0 elsewhere."""
+    return jnp.where(mask, g.row_ptr[1:] - g.row_ptr[:-1], 0)
+
+
+#: base of the two-limb int32 edge accumulator carried through the loop.
+#: int64 is unavailable without jax_enable_x64, and a single int32 would
+#: silently wrap once a traversal relaxes > 2^31 edges (long-diameter or
+#: re-relaxation-heavy runs); two limbs keep totals exact below 2^51.
+_LIMB = 1 << 20
+
+
+def _limb_add(hi, lo, e):
+    """(hi, lo) + e with the invariant lo < _LIMB (e any int32 >= 0)."""
+    e_hi = e // _LIMB
+    lo = lo + (e - e_hi * _LIMB)
+    return hi + e_hi + lo // _LIMB, lo % _LIMB
+
+
+def _merge_path_relax(g: CSRGraph, dist, updated, work, cursor=None):
+    """One synchronous merge-path relax over ``E`` edge lanes.
+
+    ``work[n]`` is how many edges node ``n`` contributes; each lane
+    binary-searches its (node, local-edge) pair in the prefix sum — the
+    on-device replacement for host compaction.  ``cursor`` (optional)
+    offsets every node's read position into its adjacency list (the HP
+    tail).  Returns ``(dist, updated, total_work)``."""
+    prefix = jnp.cumsum(work)
+    exclusive = prefix - work
+    total = prefix[-1]
+    k = jnp.arange(g.num_edges, dtype=jnp.int32)
+    node = jnp.searchsorted(prefix, k, side="right").astype(jnp.int32)
+    node = jnp.clip(node, 0, g.num_nodes - 1)
+    local = k - exclusive[node]
+    start = g.row_ptr[node] if cursor is None else g.row_ptr[node] + cursor[node]
+    eidx = jnp.clip(start + local, 0, g.num_edges - 1)
+    valid = k < total
+    dist, updated, _ = _apply_relax(
+        dist, updated, node, g.col[eidx], _edge_weight(g, eidx), valid)
+    return dist, updated, total
+
+
+def _bs_step(g: CSRGraph, dist, mask):
+    """Dense BS: every node lane walks its own adjacency list in lockstep.
+
+    Column ``d`` relaxes the ``d``-th edge of every frontier node — the
+    same relax batches, in the same order, as ``bs_relax`` over a
+    compacted frontier, so intra-iteration propagation is identical."""
+    deg = _masked_degrees(g, mask)
+    base = g.row_ptr[:-1]
+    nodes = jnp.arange(g.num_nodes, dtype=jnp.int32)
+    fmax = jnp.max(deg)
+    updated = jnp.zeros_like(mask)
+
+    def cond(c):
+        return c[0] < fmax
+
+    def body(c):
+        d, dist, updated = c
+        valid = mask & (d < deg)
+        eidx = jnp.clip(base + d, 0, g.num_edges - 1)
+        dist, updated, _ = _apply_relax(
+            dist, updated, nodes, g.col[eidx], _edge_weight(g, eidx), valid)
+        return d + 1, dist, updated
+
+    _, dist, updated = lax.while_loop(cond, body,
+                                      (jnp.int32(0), dist, updated))
+    return dist, updated, jnp.sum(deg)
+
+
+def _wd_step(g: CSRGraph, dist, mask):
+    """Dense WD: merge-path over the frontier's edges, ``E`` lanes.
+
+    One synchronous ``_merge_path_relax`` over the masked degrees — same
+    snapshot semantics as ``wd_relax``."""
+    deg = _masked_degrees(g, mask)
+    updated = jnp.zeros_like(mask)
+    dist, updated, total = _merge_path_relax(g, dist, updated, deg)
+    return dist, updated, total
+
+
+def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int):
+    """Dense HP: the stepped driver's hybrid, on device.
+
+    ``count <= switch_threshold`` → straight WD (one synchronous pass);
+    otherwise MDT-wide tiles in an inner while_loop until the live sublist
+    shrinks to the threshold, then a cursor-aware WD tail over the
+    remainder.  Chunk boundaries — and therefore intra-iteration value
+    propagation — match ``HierarchicalProcessing.iterate`` exactly."""
+    deg = _masked_degrees(g, mask)
+    count = jnp.sum(mask.astype(jnp.int32))
+    n, e = g.num_nodes, g.num_edges
+    base = g.row_ptr[:-1]
+    nodes = jnp.arange(n, dtype=jnp.int32)
+
+    def small(dist):
+        dist, updated, _ = _wd_step(g, dist, mask)
+        return dist, updated
+
+    def big(dist):
+        j = jnp.arange(mdt, dtype=jnp.int32)[None, :]
+
+        def live(cursor):
+            return jnp.sum((mask & (cursor < deg)).astype(jnp.int32))
+
+        def cond(c):
+            i, cursor = c[0], c[1]
+            # do-while: the stepped driver always runs the first
+            # sub-iteration (entry was gated on count > switch_threshold)
+            return (i == 0) | (live(cursor) > switch_threshold)
+
+        def body(c):
+            i, cursor, dist, updated = c
+            pos = cursor[:, None] + j                       # [N, mdt]
+            valid = mask[:, None] & (pos < deg[:, None])
+            eidx = jnp.clip(base[:, None] + pos, 0, e - 1).reshape(-1)
+            src = jnp.broadcast_to(nodes[:, None], (n, mdt)).reshape(-1)
+            dist, updated, _ = _apply_relax(
+                dist, updated, src, g.col[eidx], _edge_weight(g, eidx),
+                valid.reshape(-1))
+            return i + 1, cursor + mdt, dist, updated
+
+        i0 = jnp.int32(0)
+        cursor0 = jnp.zeros((n,), jnp.int32)
+        upd0 = jnp.zeros_like(mask)
+        _, cursor, dist, updated = lax.while_loop(
+            cond, body, (i0, cursor0, dist, upd0))
+
+        # cursor-aware WD tail over the surviving sublist (≤ threshold
+        # nodes, all remaining edges in one synchronous pass)
+        rem = jnp.where(mask, jnp.maximum(deg - cursor, 0), 0)
+        dist, updated, _ = _merge_path_relax(g, dist, updated, rem, cursor)
+        return dist, updated
+
+    dist, updated = lax.cond(count <= switch_threshold, small, big, dist)
+    return dist, updated, jnp.sum(deg)
+
+
+def _ep_step(g: CSRGraph, edge_src, dist, mask):
+    """Dense EP: all ``E`` edge lanes, valid where the source is live.
+
+    The dense analogue of a chunked edge worklist — deduplicated by
+    construction, one synchronous relax per iteration."""
+    valid = mask[edge_src]
+    eidx = jnp.arange(g.num_edges, dtype=jnp.int32)
+    updated = jnp.zeros_like(mask)
+    dist, updated, _ = _apply_relax(
+        dist, updated, edge_src, g.col, _edge_weight(g, eidx), valid)
+    return dist, updated, jnp.sum(valid.astype(jnp.int32))
+
+
+def _ns_step(g2: CSRGraph, child_parent, dist, mask):
+    """Dense NS: mirror parent attributes onto children (the
+    ``ns_activate`` pass), then dense BS on the split graph."""
+    dist = jnp.minimum(dist, dist[child_parent])
+    mask = mask | mask[child_parent]
+    return _bs_step(g2, dist, mask)
+
+
+def _ad_step(g: CSRGraph, dist, mask, *, mdt: int, small_frontier: int,
+             imbalance_threshold: float, hp_edges_threshold: int,
+             switch_threshold: int):
+    """On-device evaluation of ``choose_kernel``'s decision structure.
+
+    Frontier statistics (count, degree sum, max degree, imbalance =
+    max/mean per-node work) produce a branch index for ``lax.switch``
+    over the dense BS/WD/HP bodies.  Returns the index so the caller can
+    tally the kernel schedule in the loop carry.
+
+    The mean/imbalance arithmetic is float32 (x64 is off), and the
+    stepped ``AdaptiveStrategy.iterate`` computes its imbalance with the
+    SAME float32 op order so the two selectors cannot disagree on a
+    threshold within one rounding step — keep them in lockstep."""
+    deg = _masked_degrees(g, mask)
+    count = jnp.sum(mask.astype(jnp.int32))
+    degree_sum = jnp.sum(deg)
+    max_degree = jnp.max(deg)
+    mean = degree_sum.astype(jnp.float32) / jnp.maximum(
+        count, 1).astype(jnp.float32)
+    imbalance = jnp.where(mean > 0,
+                          max_degree.astype(jnp.float32) / mean,
+                          jnp.float32(1.0))
+    take_bs = ((degree_sum == 0) | (count == 0)
+               | ((count <= small_frontier)
+                  & (imbalance <= jnp.float32(imbalance_threshold))))
+    take_hp = (max_degree > mdt) & (degree_sum >= hp_edges_threshold)
+    idx = jnp.where(take_bs, 0, jnp.where(take_hp, 2, 1)).astype(jnp.int32)
+
+    dist, updated, edges = lax.switch(
+        idx,
+        [lambda d: _bs_step(g, d, mask),
+         lambda d: _wd_step(g, d, mask),
+         lambda d: _hp_step(g, d, mask, mdt=mdt,
+                            switch_threshold=switch_threshold)],
+        dist)
+    return dist, updated, edges, idx
+
+
+# ---------------------------------------------------------------------------
+# the single-dispatch fixed point
+# ---------------------------------------------------------------------------
+
+_AD_KERNEL_ORDER = ("BS", "WD", "HP")   # lax.switch branch order
+
+
+@partial(jax.jit, static_argnames=(
+    "kernel", "max_iterations", "mdt", "small_frontier",
+    "imbalance_threshold", "hp_edges_threshold", "switch_threshold"))
+def _fixed_point(g: CSRGraph, aux, dist, mask, *, kernel: str,
+                 max_iterations: int, mdt: int = 1,
+                 small_frontier: int = 512,
+                 imbalance_threshold: float = 4.0,
+                 hp_edges_threshold: int = 1 << 15,
+                 switch_threshold: int = 1024):
+    """Whole traversal, one dispatch.
+
+    ``aux`` is the kernel's side table: per-edge source ids for ``EP``,
+    the child→parent map for ``NS``, a 1-element dummy otherwise.  The
+    carry is ``(it, dist, mask, edges_hi, edges_lo, kernel_counts)`` —
+    the edge total rides in a two-limb int32 accumulator (``_limb_add``)
+    so it stays exact past 2^31; ``kernel_counts`` only moves for
+    ``AD``."""
+    TRACE_COUNTS[kernel] += 1    # Python side effect ⇒ counts compilations
+
+    def frontier_live(mask):
+        if kernel == "EP":
+            # the edge-worklist driver stops when the frontier has no
+            # outgoing edges, one round before the node drivers
+            return jnp.sum(_masked_degrees(g, mask)) > 0
+        return jnp.any(mask)
+
+    def cond(c):
+        it, _, mask = c[0], c[1], c[2]
+        return frontier_live(mask) & (it < max_iterations)
+
+    def body(c):
+        it, dist, mask, e_hi, e_lo, kcounts = c
+        if kernel == "BS":
+            dist, new_mask, e = _bs_step(g, dist, mask)
+        elif kernel == "WD":
+            dist, new_mask, e = _wd_step(g, dist, mask)
+        elif kernel == "HP":
+            dist, new_mask, e = _hp_step(
+                g, dist, mask, mdt=mdt, switch_threshold=switch_threshold)
+        elif kernel == "EP":
+            dist, new_mask, e = _ep_step(g, aux, dist, mask)
+        elif kernel == "NS":
+            dist, new_mask, e = _ns_step(g, aux, dist, mask)
+        elif kernel == "AD":
+            dist, new_mask, e, idx = _ad_step(
+                g, dist, mask, mdt=mdt, small_frontier=small_frontier,
+                imbalance_threshold=imbalance_threshold,
+                hp_edges_threshold=hp_edges_threshold,
+                switch_threshold=switch_threshold)
+            kcounts = kcounts.at[idx].add(1)
+        else:  # pragma: no cover - guarded by _plan
+            raise ValueError(f"unknown fused kernel {kernel!r}")
+        e_hi, e_lo = _limb_add(e_hi, e_lo, e)
+        return it + 1, dist, new_mask, e_hi, e_lo, kcounts
+
+    carry = (jnp.int32(0), dist, mask, jnp.int32(0), jnp.int32(0),
+             jnp.zeros((len(_AD_KERNEL_ORDER),), jnp.int32))
+    it, dist, mask, e_hi, e_lo, kcounts = lax.while_loop(cond, body, carry)
+    return dist, it, e_hi, e_lo, kcounts
+
+
+# ---------------------------------------------------------------------------
+# strategy instance -> fused lowering
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FusedPlan:
+    """How to run one strategy as a single fused dispatch."""
+    kernel: str
+    graph: CSRGraph            # graph the loop runs on (split graph for NS)
+    aux: Optional[jax.Array]   # EP edge sources / NS child_parent
+    static: dict               # threshold kwargs for _fixed_point
+
+
+def _plan(strategy, state, graph: CSRGraph) -> FusedPlan:
+    """Map a set-up strategy instance to its fused lowering.
+
+    Raises ``ValueError`` for strategies without one (e.g. user-registered
+    strategies whose ``iterate`` is host-stepped only)."""
+    if isinstance(strategy, AdaptiveStrategy):
+        hp = strategy._kernels["HP"]
+        return FusedPlan("AD", graph, None, dict(
+            mdt=int(strategy.mdt_value),
+            small_frontier=int(strategy.small_frontier),
+            imbalance_threshold=float(strategy.imbalance_threshold),
+            hp_edges_threshold=int(strategy.hp_edges_threshold),
+            switch_threshold=int(hp.switch_threshold)))
+    if isinstance(strategy, HierarchicalProcessing):
+        return FusedPlan("HP", graph, None, dict(
+            mdt=int(strategy.mdt_value),
+            switch_threshold=int(strategy.switch_threshold)))
+    if isinstance(strategy, NodeSplitting):
+        sg = strategy.split_info
+        return FusedPlan("NS", sg.graph, sg.child_parent, {})
+    if isinstance(strategy, EdgeBased):
+        if not strategy.chunked:
+            # the unchunked per-edge push (duplicate worklist entries,
+            # paper Fig. 11) has no dense equivalent — a dense mask is
+            # deduplicated by construction, so fusing it would silently
+            # measure the chunked algorithm instead
+            raise ValueError(
+                "EP with chunked=False has no fused lowering "
+                "(dense frontiers are deduplicated by construction); "
+                "use mode='stepped'")
+        return FusedPlan("EP", graph, state.src, {})
+    if isinstance(strategy, WorkloadDecomposition):
+        return FusedPlan("WD", graph, None, {})
+    if isinstance(strategy, NodeBased):
+        return FusedPlan("BS", graph, None, {})
+    raise ValueError(
+        f"strategy {strategy.name!r} has no fused lowering; "
+        f"use mode='stepped'")
+
+
+def run_fixed_point(graph: CSRGraph, state: Any, strategy, dist0, mask0, *,
+                    max_iterations: int = 100000):
+    """Run one strategy's whole traversal as a single fused dispatch.
+
+    ``dist0``/``mask0`` are the initial distance/frontier arrays on the
+    strategy's allocation (the split graph's for NS) — callers own
+    seeding (single source, multi-source CC labels, ...) and extraction.
+    Returns ``(dist, iterations, edges_relaxed)`` with the first still on
+    device; for AD the kernel tally is stored on the strategy as
+    ``kernel_counts``, mirroring the stepped driver."""
+    plan = _plan(strategy, state, graph)
+    DISPATCH_COUNTS[plan.kernel] += 1
+    aux = (jnp.zeros((1,), jnp.int32) if plan.aux is None else plan.aux)
+    dist, it, e_hi, e_lo, kcounts = _fixed_point(
+        plan.graph, aux, dist0, mask0, kernel=plan.kernel,
+        max_iterations=max_iterations, **plan.static)
+    jax.block_until_ready(dist)
+    if plan.kernel == "AD":
+        counts = [int(c) for c in kcounts]
+        strategy.kernel_counts = {
+            name: c for name, c in zip(_AD_KERNEL_ORDER, counts) if c}
+    return dist, int(it), int(e_hi) * _LIMB + int(e_lo)
+
+
+# ---------------------------------------------------------------------------
+# batched multi-source fixed point (K queries, zero host syncs)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("max_iterations",))
+def _batch_fixed_point(g: CSRGraph, dist_b, mask_b, *,
+                       max_iterations: int):
+    """All K queries to their fixed points in one dispatch.
+
+    The dense WD step vmapped over the source axis inside one while_loop
+    — the fused counterpart of ``multi_source.batched_wd_relax``'s
+    per-iteration dispatch.  Iterations count until *every* row's
+    frontier is empty (the batch's fixed point), matching the stepped
+    driver; the edge total sums the per-row masked degree sums."""
+    TRACE_COUNTS["batch"] += 1
+
+    def cond(c):
+        it, _, mask_b = c[0], c[1], c[2]
+        return jnp.any(mask_b) & (it < max_iterations)
+
+    def body(c):
+        it, dist_b, mask_b, e_hi, e_lo = c
+        dist_b, mask_b, e = jax.vmap(
+            lambda d, m: _wd_step(g, d, m))(dist_b, mask_b)
+        # fold the K per-row totals one _limb_add at a time (each row is
+        # < 2^31, but even the per-row remainders could wrap a plain
+        # int32 sum once K is large)
+        e_hi, e_lo = lax.fori_loop(
+            0, e.shape[0],
+            lambda i, c: _limb_add(c[0], c[1], e[i]),
+            (e_hi, e_lo))
+        return it + 1, dist_b, mask_b, e_hi, e_lo
+
+    it, dist_b, mask_b, e_hi, e_lo = lax.while_loop(
+        cond, body, (jnp.int32(0), dist_b, mask_b, jnp.int32(0),
+                     jnp.int32(0)))
+    return dist_b, it, e_hi, e_lo
+
+
+def run_batch_fixed_point(graph: CSRGraph, dist_b, mask_b, *,
+                          max_iterations: int = 100000):
+    """Host wrapper for :func:`_batch_fixed_point` (dispatch-counted)."""
+    DISPATCH_COUNTS["batch"] += 1
+    dist_b, it, e_hi, e_lo = _batch_fixed_point(
+        graph, dist_b, mask_b, max_iterations=max_iterations)
+    jax.block_until_ready(dist_b)
+    return dist_b, int(it), int(e_hi) * _LIMB + int(e_lo)

@@ -20,6 +20,24 @@ simply stops producing frontier bits.  :func:`refill_slot` swaps a fresh
 source into a finished row without touching the other K-1 rows, which is
 what the continuous-batching serving loop in
 ``examples/serve_graph_queries.py`` builds on.
+
+Execution modes (``run_batch(..., mode=)``):
+
+* ``"stepped"`` — the loop above: one ``batched_wd_relax`` dispatch per
+  iteration, with the host in between syncing the mask
+  (``np.asarray(mask_b)``) to size worklist capacities and collect
+  per-iteration stats.  **Host-stepped**: do not call from traced code.
+* ``"fused"`` — the whole batch to its fixed point in one
+  ``lax.while_loop`` dispatch (K queries × zero host syncs), via
+  :func:`repro.core.fused.run_batch_fixed_point`: the dense-mask WD step
+  vmapped over sources, capacities fixed at the graph's static shapes, so
+  no per-iteration bucketing (and no per-iteration ``iter_stats``).
+
+Fused-safety note for contributors: :func:`init_batch`,
+:func:`refill_slot` and :func:`batched_wd_relax` are pure jitted device
+functions (safe to compose into traced code); :func:`run_batch` itself is
+a host driver — its ``int()``/``np.asarray`` syncs must never move inside
+a ``jit``/``while_loop`` boundary.
 """
 
 from __future__ import annotations
@@ -46,6 +64,7 @@ class BatchRunResult:
     edges_relaxed: int               # summed over all K sources
     iter_stats: list
     strategy: str = "WD-batch"
+    mode: str = "stepped"            # "stepped" or "fused"
 
     @property
     def mteps(self) -> float:
@@ -96,14 +115,18 @@ def refill_slot(dist_b, mask_b, slot: jax.Array, source: jax.Array):
     return dist_b.at[slot].set(row), mask_b.at[slot].set(frontier_row)
 
 
-def run_batch(graph: CSRGraph, sources, *,
-              max_iterations: int = 100000) -> BatchRunResult:
+def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
+              mode: str = "stepped") -> BatchRunResult:
     """Fixed-point driver over K sources at once.
 
     Semantics match K independent ``engine.run`` calls exactly (same
     scatter-min relax per source); only the batching differs.  ``graph.wt
-    is None`` ⇒ BFS levels, else SSSP distances.
+    is None`` ⇒ BFS levels, else SSSP distances.  ``mode="fused"`` runs
+    the whole batch in one device dispatch (see module docstring).
     """
+    if mode not in ("stepped", "fused"):
+        raise ValueError(
+            f"mode must be 'stepped' or 'fused', got {mode!r}")
     sources = np.asarray(sources, np.int32)
     k = int(sources.shape[0])
     n = graph.num_nodes
@@ -111,17 +134,28 @@ def run_batch(graph: CSRGraph, sources, *,
         return BatchRunResult(dist=np.zeros((0, n), np.int32),
                               sources=sources, iterations=0,
                               total_seconds=0.0, edges_relaxed=0,
-                              iter_stats=[])
-    degrees = np.asarray(graph.degrees)
+                              iter_stats=[], mode=mode)
     if graph.num_edges == 0:
         dist = np.full((k, n), INF, np.int32)
         dist[np.arange(k), sources] = 0
         return BatchRunResult(dist=dist, sources=sources, iterations=0,
                               total_seconds=0.0, edges_relaxed=0,
-                              iter_stats=[])
+                              iter_stats=[], mode=mode)
 
     t0 = time.perf_counter()
     dist_b, mask_b = init_batch(n, jnp.asarray(sources))
+
+    if mode == "fused":
+        from repro.core import fused
+        dist_b, iterations, edges = fused.run_batch_fixed_point(
+            graph, dist_b, mask_b, max_iterations=max_iterations)
+        total_s = time.perf_counter() - t0
+        return BatchRunResult(dist=np.asarray(dist_b), sources=sources,
+                              iterations=iterations, total_seconds=total_s,
+                              edges_relaxed=edges, iter_stats=[],
+                              mode="fused")
+
+    degrees = np.asarray(graph.degrees)
     iter_stats: list[IterStats] = []
     edges = 0
     it = 0

@@ -16,6 +16,21 @@ AD  (adaptive)  per-iteration choice of BS/WD/HP CSR
 Strategies live in the :data:`STRATEGIES` registry; new ones are added with
 the :func:`register` decorator and instantiated via :func:`make_strategy`.
 
+Two kinds of code live here — keep them apart (docs/architecture.md):
+
+* **fused-safe relax kernels** (``bs_relax``, ``ep_relax``, ``wd_relax``,
+  ``hp_sub_relax``, ``ns_activate``, ``_apply_relax``, the push/compact
+  helpers): pure jitted ``(arrays) -> (arrays)`` functions with static
+  shapes and **no host syncs** — safe to call from traced code, and the
+  basis for the dense-mask variants in :mod:`repro.core.fused`.
+* **host-stepped drivers** (every ``Strategy.iterate`` /
+  ``relax_and_push`` / ``setup``): orchestration that may freely sync to
+  the host (``int(...)``, ``np.asarray``) to count frontiers, pick
+  capacity buckets and collect stats.  These must NEVER be called from
+  inside ``jit``/``while_loop``-traced code — a single ``int()`` there
+  reintroduces the per-iteration host round-trip the fused engine
+  exists to remove.
+
 CUDA-thread semantics map to dense vectorized batches:
   * atomicMin(dist[d], alt)  →  dist.at[d].min(alt)        (scatter-min)
   * worklist push w/chunking →  flag → cumsum → run_fill   (1 slot/node)
@@ -38,7 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import balance, node_split
+from repro.core import node_split
 from repro.core.graph import CSRGraph, COOGraph, INF
 from repro.core.worklist import bucket, compact_mask, run_fill
 
@@ -250,7 +265,13 @@ class IterStats:
 
 
 class StrategyBase:
-    """A strategy = host preprocessing + one frontier-relax iteration."""
+    """A strategy = host preprocessing + one frontier-relax iteration.
+
+    ``setup`` and ``iterate`` are host-stepped entry points (they may
+    sync device values); the jitted kernels they dispatch are the
+    fused-safe parts.  A strategy additionally gains ``mode="fused"``
+    support by having a dense-mask lowering mapped in
+    ``repro.core.fused._plan``."""
 
     name = "base"
     #: peak auxiliary device bytes (graph copies etc.) — feeds the paper's
@@ -385,9 +406,10 @@ class WorkloadDecomposition(StrategyBase):
         cap = bucket(count)
         frontier = compact_mask(updated_mask, cap)
         stats = _frontier_stats(g, frontier, count, record_degrees)
-        # edge_total lets callers that already synced the mask (AD) skip
-        # the second device-to-host transfer + gather
-        total = (int(self._degrees[np.asarray(updated_mask)].sum())
+        # edge_total lets callers that already synced the mask (AD) pass
+        # their degree sum; otherwise reuse the one _frontier_stats just
+        # computed — no second device-to-host transfer + gather
+        total = (int(stats.edges_processed)
                  if edge_total is None else int(edge_total))
         cursor = jnp.zeros((cap,), jnp.int32)
         dist, new_mask = wd_relax(g, dist, frontier, cursor,
@@ -489,13 +511,21 @@ class HierarchicalProcessing(StrategyBase):
 
 
 def _frontier_stats(g, frontier, count, record_degrees) -> IterStats:
+    """Host-stepped stats for one frontier (syncs the worklist).
+
+    ``edges_processed`` is always filled — it is the degree sum the
+    iteration will relax, which keeps stepped ``RunResult.edges_relaxed``
+    (and MTEPS) meaningful for BS/NS/HP and bit-identical to fused runs;
+    ``record_degrees`` additionally keeps the per-node degree array for
+    the balance analysis."""
     stats = IterStats(frontier_size=int(count), edges_processed=0)
+    f = np.asarray(frontier)
+    f = f[f >= 0]
+    row_ptr = np.asarray(g.row_ptr)
+    degrees = row_ptr[f + 1] - row_ptr[f]
+    stats.edges_processed = int(degrees.sum())
     if record_degrees:
-        f = np.asarray(frontier)
-        f = f[f >= 0]
-        row_ptr = np.asarray(g.row_ptr)
-        stats.frontier_degrees = row_ptr[f + 1] - row_ptr[f]
-        stats.edges_processed = int(stats.frontier_degrees.sum())
+        stats.frontier_degrees = degrees
     return stats
 
 
@@ -509,6 +539,10 @@ def choose_kernel(count: int, degree_sum: int, max_degree: int,
                   imbalance_threshold: float = 4.0,
                   hp_edges_threshold: int = 1 << 15) -> str:
     """Pick the relax kernel for one iteration from frontier statistics.
+
+    Host-side reference implementation of the decision structure; if you
+    change it, mirror the change in ``repro.core.fused._ad_step``, which
+    evaluates the same branches on device for ``mode="fused"``.
 
     The decision structure follows arXiv:1911.09135 (which switches load
     balancers at runtime from frontier size and degree distribution):
@@ -537,11 +571,11 @@ class AdaptiveStrategy(StrategyBase):
 
     Keeps BS, WD and HP sub-strategies warm against the same CSR state and
     delegates each frontier iteration to whichever kernel
-    :func:`choose_kernel` selects from the statistics
-    ``repro.core.balance`` derives (frontier size, degree sum, imbalance
-    factor).  All three kernels share the ``dist`` layout, so switching
-    mid-run is free — no state conversion between iterations (the property
-    arXiv:1911.09135 exploits).
+    :func:`choose_kernel` selects from host-computed frontier statistics
+    (frontier size, degree sum, imbalance factor — the same quantities
+    ``repro.core.balance.analyze`` reports).  All three kernels share the
+    ``dist`` layout, so switching mid-run is free — no state conversion
+    between iterations (the property arXiv:1911.09135 exploits).
     """
     name = "AD"
 
@@ -550,7 +584,10 @@ class AdaptiveStrategy(StrategyBase):
                  hp_edges_threshold: int = 1 << 15,
                  histogram_bins: int = 10, mdt: Optional[int] = None):
         self.small_frontier = small_frontier
-        self.imbalance_threshold = imbalance_threshold
+        # canonicalized to float32: the fused selector compares in f32 on
+        # device, so the host side must hold the same representable value
+        # or the two could disagree within one rounding step
+        self.imbalance_threshold = float(np.float32(imbalance_threshold))
         self.hp_edges_threshold = hp_edges_threshold
         self.histogram_bins = histogram_bins
         self.mdt = mdt
@@ -571,20 +608,29 @@ class AdaptiveStrategy(StrategyBase):
         return graph
 
     def iterate(self, g, dist, updated_mask, count, *, record_degrees=False):
+        # host-stepped: the mask sync below is the price of host-side
+        # statistics.  The fused AD (repro.core.fused._ad_step) computes
+        # the same statistics on device — mean/imbalance deliberately in
+        # float32 with the same op order here, so the two selectors can
+        # never disagree at a threshold boundary.
         fdeg = self._degrees[np.asarray(updated_mask)]
-        report = balance.analyze("BS", fdeg)
+        degree_sum = int(fdeg.sum())
+        max_degree = int(fdeg.max(initial=0))
+        mean = np.float32(degree_sum) / np.float32(max(int(count), 1))
+        imbalance = (float(np.float32(max_degree) / mean)
+                     if mean > 0 else 1.0)
         choice = choose_kernel(
-            int(count), report.useful, int(fdeg.max(initial=0)),
-            report.imbalance_factor, mdt=self.mdt_value,
+            int(count), degree_sum, max_degree,
+            imbalance, mdt=self.mdt_value,
             small_frontier=self.small_frontier,
             imbalance_threshold=self.imbalance_threshold,
             hp_edges_threshold=self.hp_edges_threshold)
         self.kernel_counts[choice] = self.kernel_counts.get(choice, 0) + 1
-        extra = {"edge_total": report.useful} if choice == "WD" else {}
+        extra = {"edge_total": degree_sum} if choice == "WD" else {}
         dist, new_mask, stats = self._kernels[choice].iterate(
             g, dist, updated_mask, count, record_degrees=record_degrees,
             **extra)
         stats.kernel = choice
         if stats.edges_processed == 0:
-            stats.edges_processed = report.useful
+            stats.edges_processed = degree_sum
         return dist, new_mask, stats

@@ -1,0 +1,97 @@
+"""Connected-components correctness against a union-find oracle.
+
+``connected_components`` propagates min labels along *directed* edges, so
+the union-find oracle (which is undirected by nature) applies on
+symmetric graphs — the rmat fixture is symmetrized accordingly.  Covers
+BS/WD/NS/HP in both stepped and fused modes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.algos import connected_components
+from repro.core.graph import CSRGraph
+from repro.data import rmat_graph
+
+STRATEGIES = ["BS", "WD", "NS", "HP"]
+MODES = ["stepped", "fused"]
+
+
+def union_find_labels(num_nodes: int, src, dst) -> np.ndarray:
+    """Min-node-id component label per node, by union-find."""
+    parent = np.arange(num_nodes)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for a, b in zip(src, dst):
+        ra, rb = find(int(a)), find(int(b))
+        if ra != rb:
+            # attach the larger root under the smaller ⇒ every root is
+            # its component's minimum node id
+            parent[max(ra, rb)] = min(ra, rb)
+    return np.array([find(i) for i in range(num_nodes)])
+
+
+def symmetrized_rmat():
+    g = rmat_graph(scale=8, edge_factor=8, weighted=False, seed=3)
+    src = np.repeat(np.arange(g.num_nodes), np.asarray(g.degrees))
+    dst = np.asarray(g.col)
+    s2 = np.concatenate([src, dst])
+    d2 = np.concatenate([dst, src])
+    return CSRGraph.from_edges(s2, d2, None, g.num_nodes,
+                               dedup=True), s2, d2
+
+
+SYM_RMAT = symmetrized_rmat()
+
+
+def two_component_graph():
+    """Triangle {0,1,2} + pair {3,4} + isolated node 5 (undirected)."""
+    src = np.array([0, 1, 1, 2, 2, 0, 3, 4])
+    dst = np.array([1, 0, 2, 1, 0, 2, 4, 3])
+    return CSRGraph.from_edges(src, dst, None, 6), src, dst
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_cc_matches_union_find_on_rmat(strategy, mode):
+    g, src, dst = SYM_RMAT
+    labels = connected_components(g, strategy=strategy, mode=mode)
+    ref = union_find_labels(g.num_nodes, src, dst)
+    np.testing.assert_array_equal(labels, ref)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_cc_two_components_and_isolated(strategy, mode):
+    g, src, dst = two_component_graph()
+    labels = connected_components(g, strategy=strategy, mode=mode)
+    np.testing.assert_array_equal(labels, [0, 0, 0, 3, 3, 5])
+    np.testing.assert_array_equal(labels,
+                                  union_find_labels(g.num_nodes, src, dst))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_cc_labels_are_component_minima(mode):
+    """Every label names the smallest node id carrying that label."""
+    g, _, _ = SYM_RMAT
+    labels = connected_components(g, strategy="WD", mode=mode)
+    for lab in np.unique(labels):
+        members = np.nonzero(labels == lab)[0]
+        assert members.min() == lab
+
+
+def test_cc_rejects_edge_based():
+    g, _, _ = two_component_graph()
+    with pytest.raises(ValueError, match="node strategy"):
+        connected_components(g, strategy="EP")
+
+
+def test_cc_mode_validation():
+    g, _, _ = two_component_graph()
+    with pytest.raises(ValueError, match="mode"):
+        connected_components(g, strategy="WD", mode="warp")

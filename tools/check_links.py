@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Fail on broken relative links in markdown files.
+
+Usage: ``python tools/check_links.py README.md docs`` — arguments are
+markdown files or directories (scanned recursively for ``*.md``).  A
+link is checked when it is relative (no scheme, not ``mailto:``, not a
+pure ``#anchor``); the target must exist on disk relative to the file
+containing the link.  Anchors are stripped before the existence check
+(``docs/foo.md#section`` checks ``docs/foo.md``).
+
+Used by the CI docs job so documentation cross-references can't rot
+silently; runs on the standard library only.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+#: inline markdown links: [text](target).  Images ![alt](target) match
+#: too via the optional leading "!".  Code spans are stripped first.
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def iter_markdown(paths: list[str]):
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.md"))
+        else:
+            yield path
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    in_fence = False
+    for lineno, line in enumerate(
+            md.read_text(encoding="utf-8").splitlines(), start=1):
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for target in LINK_RE.findall(CODE_SPAN_RE.sub("", line)):
+            if "://" in target or target.startswith(("mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                errors.append(f"{md}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["README.md", "docs"]
+    errors = []
+    checked = 0
+    for md in iter_markdown(paths):
+        if not md.exists():
+            errors.append(f"{md}: no such file")
+            continue
+        checked += 1
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {checked} markdown file(s), "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
