@@ -1,0 +1,89 @@
+"""Fig. 14 (extension): MTEPS across the operator × strategy × mode grid.
+
+The operator API's claim is that algorithm semantics are free to swap
+under any schedule (docs/operators.md).  This module prices that claim:
+for each edge operator (min-plus SSSP, min-label CC-style propagation,
+max-min widest path) it runs every CSR strategy in both execution modes
+on the power-law and bounded-degree graph families and reports MTEPS.
+
+Two things to look for in the table:
+
+* *schedule dominance is operator-independent* — the strategy ordering
+  the paper establishes for SSSP (Figs. 7–9) carries over to the other
+  operators, because the per-edge work differs by one arithmetic op
+  while the imbalance structure (the thing strategies fight) is the
+  graph's alone;
+* *iteration structure is operator-dependent* — min_label starts from a
+  single source here (reachability labeling), widest_path explores in
+  width order, so edge totals and iteration counts differ per operator
+  even on the same graph.
+
+``reach_count`` is excluded: its convergence domain is layered DAGs
+(docs/operators.md), not the cyclic benchmark families.  Every run
+asserts stepped/fused bit-parity before timing is reported.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, run_strategy, save_result
+from repro.data import rmat_graph, road_grid_graph
+
+#: sized like fig13 (dispatch overhead and operator cost are both
+#: scale-independent; fused capacity padding is O(E) serialized work on
+#: the CPU backend, so main-suite sizes add runtime, not information)
+FIG14_GRAPHS = {
+    "rmat": lambda: rmat_graph(scale=11, edge_factor=8, weighted=True,
+                               seed=7),
+    "road": lambda: road_grid_graph(side=64, weighted=True, seed=7),
+}
+#: the CSR strategies with fused lowerings (fig13's set — EP/NS add
+#: memory/morph axes fig9/fig10 already cover)
+FIG14_STRATEGIES = ["BS", "WD", "HP", "AD"]
+#: idempotent monotone built-ins — well-defined on cyclic graphs
+FIG14_OPERATORS = ["shortest_path", "min_label", "widest_path"]
+
+
+def run(verbose: bool = True):
+    rows = []
+    for gname, make in FIG14_GRAPHS.items():
+        g = make()
+        for opname in FIG14_OPERATORS:
+            for s in FIG14_STRATEGIES:
+                stepped = run_strategy(g, s, mode="stepped", op=opname)
+                fused = run_strategy(g, s, mode="fused", op=opname)
+                np.testing.assert_array_equal(
+                    fused.dist, stepped.dist,
+                    err_msg=f"fused diverged: {opname}/{s}/{gname}")
+                assert fused.iterations == stepped.iterations, (
+                    f"iteration drift: {opname}/{s}/{gname}")
+                assert fused.edges_relaxed == stepped.edges_relaxed, (
+                    f"edge-total drift: {opname}/{s}/{gname}")
+                rows.append({
+                    "graph": gname, "operator": opname, "strategy": s,
+                    "iterations": stepped.iterations,
+                    "edges_relaxed": stepped.edges_relaxed,
+                    "stepped_s": stepped.traversal_seconds,
+                    "fused_s": fused.traversal_seconds,
+                    "mteps_stepped": stepped.mteps,
+                    "mteps_fused": fused.mteps,
+                })
+
+    save_result("fig14_operators", {"rows": rows})
+    lines = []
+    for r in rows:
+        derived = (f"op={r['operator']};"
+                   f"mteps_stepped={r['mteps_stepped']:.2f};"
+                   f"mteps_fused={r['mteps_fused']:.2f};"
+                   f"iters={r['iterations']}")
+        lines.append(csv_line(
+            f"fig14_operators/{r['graph']}/{r['operator']}/{r['strategy']}",
+            r["stepped_s"] * 1e6, derived))
+    if verbose:
+        print("\n".join(lines))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

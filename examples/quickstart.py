@@ -52,6 +52,17 @@ def main():
           f"{res.total_seconds*1e3:.1f} ms, {res.mteps:.2f} MTEPS, "
           f"kernels={res.iterations} iterations in 1 dispatch")
 
+    # the same schedules under different SEMANTICS (docs/operators.md):
+    # swap the edge operator, keep the strategy — no new kernels
+    from repro.algos import connected_components, reference_widest, widest_path
+    wide = widest_path(g, source, strategy="HP")
+    assert np.array_equal(wide.dist, reference_widest(g, source))
+    labels = connected_components(g, strategy="WD", mode="fused")
+    print(f"\noperators on the same machinery: widest_path[HP] max width "
+          f"{int(np.max(wide.dist[wide.dist < np.max(wide.dist)])):d} "
+          f"(oracle ✓), min_label CC[WD,fused] found "
+          f"{len(np.unique(labels))} components")
+
 
 if __name__ == "__main__":
     main()

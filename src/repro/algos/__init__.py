@@ -1,3 +1,4 @@
 from repro.algos.bfs import bfs, bfs_batch  # noqa: F401
 from repro.algos.sssp import sssp, sssp_batch  # noqa: F401
 from repro.algos.cc import connected_components  # noqa: F401
+from repro.algos.widest import widest_path, reference_widest  # noqa: F401

@@ -1,5 +1,9 @@
 """Breadth-first search as level propagation (paper §IV processing kernel).
 
+A thin declaration over the operator API: BFS is the
+:data:`repro.core.operators.shortest_path` operator on an unweighted
+graph (every edge weight 1, so min-plus relaxation counts levels).
+
 BFS is the memory-bound member of the pair: almost no arithmetic per edge,
 so strategy overheads dominate unless the graph is large (paper Fig. 8).
 Computing the minimum level distributes over +1, which is exactly the

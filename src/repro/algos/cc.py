@@ -1,14 +1,23 @@
-"""Connected components by label propagation — a third application showing
-the strategies are algorithm-agnostic (the engine relaxes min-labels over
-edges exactly like SSSP with zero weights from a virtual multi-source).
+"""Connected components — a thin declaration over the operator API.
 
-The trick: initialize ``dist[v] = v`` (every node its own label), activate
-*every* node, and relax over a zero-weight copy of the graph.  The
-scatter-min relax then propagates the minimum reachable node id instead of
-a distance, and the fixed point assigns each node the min label of its
-component.  On a symmetric (undirected) graph that is exactly connected
-components; on a directed graph it is the min id over nodes that can reach
-``v``.  See docs/algorithms.md.
+CC *is* min-label propagation: seed every node with its own id as the
+label, activate everyone, and let the engine fold
+:data:`repro.core.operators.min_label` (message = copy the source's
+label, combine = min) to its fixed point.  Each node ends up with the
+minimum id among nodes that reach it — on a symmetric (undirected) graph
+exactly its connected component's minimum id; on a directed graph the
+min id over its in-reachable set.  See docs/algorithms.md.
+
+Historically this module faked CC as "SSSP on a zero-weight copy of the
+graph"; the :class:`~repro.core.operators.EdgeOp` factoring makes that
+hack (and its extra ``E``-sized weight allocation) unnecessary — the
+operator simply ignores weights.  ``tests/test_operators.py`` keeps the
+old construction around as an oracle proving the two agree bit-for-bit.
+
+Any strategy declaring the :data:`repro.core.strategies.FRONTIER_INIT`
+capability works (all node strategies, including third-party
+registrations); EP does not declare it — its edge worklist is seeded
+from a single source — and is rejected by ``engine.fixed_point``.
 
 ``mode="fused"`` runs the propagation as one device dispatch via
 :mod:`repro.core.fused`; ``"stepped"`` keeps the host-driven loop.
@@ -19,47 +28,27 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import fused as _fused
-from repro.core.engine import _ready, make_strategy
-from repro.core.graph import CSRGraph, INF
-from repro.core.strategies import EdgeBased
+from repro.core import operators
+from repro.core.engine import fixed_point, make_strategy
 
 
-def connected_components(graph: CSRGraph, strategy: str = "WD",
+def connected_components(graph, strategy: str = "WD",
                          max_iterations: int = 10000,
                          mode: str = "stepped",
                          **strategy_kwargs) -> np.ndarray:
-    """Returns the min-node-id label of each node's (out-)component."""
-    if mode not in ("stepped", "fused"):
-        raise ValueError(
-            f"mode must be 'stepped' or 'fused', got {mode!r}")
+    """Returns the min-node-id label of each node's (in-)component."""
     strat = make_strategy(strategy, **strategy_kwargs)
-    if isinstance(strat, EdgeBased):
-        raise ValueError("cc uses multi-source init; use a node strategy")
-    # zero edge weights: relax becomes pure min-label propagation
-    g = CSRGraph(graph.row_ptr, graph.col,
-                 jnp.zeros((graph.num_edges,), jnp.int32), graph.num_nodes,
-                 graph.num_edges, graph.max_degree)
-    state = strat.setup(g)
-    n_alloc = (strat.split_info.graph.num_nodes
-               if strategy == "NS" else g.num_nodes)
-    # label = own id; every node starts active
-    dist = jnp.arange(n_alloc, dtype=jnp.int32)
-    if strategy == "NS":
-        # children start with their parent's label
-        dist = dist.at[graph.num_nodes:].set(
-            strat.split_info.child_parent[graph.num_nodes:])
-    mask = jnp.ones((n_alloc,), jnp.bool_)
-    if mode == "fused":
-        dist, _, _ = _fused.run_fixed_point(
-            g, state, strat, dist, mask, max_iterations=max_iterations)
-    else:
-        count, it = n_alloc, 0
-        while count > 0 and it < max_iterations:
-            dist, mask, _ = strat.iterate(state, dist, mask, count)
-            _ready(dist)
-            count = int(jnp.sum(mask))
-            it += 1
-    if strategy == "NS":
-        dist = strat.split_info.extract_original(dist)
-    return np.asarray(dist)
+
+    def every_node_its_own_label(n_alloc):
+        # label = own id; every node starts active.  NS children (ids
+        # ≥ num_nodes) are seeded with their own id too — the first
+        # ns_activate mirror replaces it with the parent's label before
+        # any child fires.
+        labels = jnp.arange(n_alloc, dtype=operators.min_label.dtype)
+        mask = jnp.ones((n_alloc,), jnp.bool_)
+        return labels, mask
+
+    labels, _, _ = fixed_point(
+        graph, strat, every_node_its_own_label, op=operators.min_label,
+        mode=mode, max_iterations=max_iterations)
+    return labels

@@ -1,7 +1,9 @@
 """Single-source shortest paths (Bellman-Ford relaxation to fixed point,
-paper Fig. 2 pseudocode).  The compute-heavier kernel of the pair: per-edge
-add + compare + scatter-min, so load balancing pays off most here
-(paper Fig. 7 — every proposed strategy beats the baseline)."""
+paper Fig. 2 pseudocode).  A thin declaration over the operator API —
+the :data:`repro.core.operators.shortest_path` operator on a weighted
+graph.  The compute-heavier kernel of the pair: per-edge add + compare +
+scatter-min, so load balancing pays off most here (paper Fig. 7 — every
+proposed strategy beats the baseline)."""
 
 from __future__ import annotations
 

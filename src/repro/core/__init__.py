@@ -2,9 +2,13 @@
 # data-driven graph algorithms, adapted from CUDA thread semantics to
 # TPU/JAX array semantics.  See DESIGN.md §2 for the mapping.
 from repro.core.graph import CSRGraph, COOGraph, INF, graph_stats  # noqa: F401
-from repro.core.engine import (run, run_batch, make_strategy, RunResult,  # noqa: F401
-                               reference_distances)
-from repro.core.strategies import STRATEGIES, register  # noqa: F401
+from repro.core.engine import (run, run_batch, fixed_point, make_strategy,  # noqa: F401
+                               RunResult, ready, reference_distances)
+from repro.core.operators import (EdgeOp, OPERATORS, register_operator,  # noqa: F401
+                                  shortest_path, min_label, widest_path,
+                                  reach_count)
+from repro.core.strategies import (STRATEGIES, FRONTIER_INIT, register,  # noqa: F401
+                                   strategy_capabilities)
 from repro.core.multi_source import BatchRunResult  # noqa: F401
 from repro.core.node_split import find_mdt, split_graph  # noqa: F401
 from repro.core import balance  # noqa: F401

@@ -1,8 +1,11 @@
 """Data-driven execution engine (paper Fig. 2 / Fig. 4 outer loop).
 
-Runs a relax-style propagation algorithm (BFS level / SSSP distance) to a
-fixed point under any registered load-balancing strategy (the paper's five
-plus the adaptive AD).  Two execution modes (see docs/architecture.md for
+Runs a relax-style propagation algorithm to a fixed point under any
+registered load-balancing strategy (the paper's five plus the adaptive
+AD).  *What* is propagated is an :class:`repro.core.operators.EdgeOp`
+(``op=`` on every entry point, default ``shortest_path`` — BFS levels on
+unweighted graphs, SSSP distances on weighted ones; see
+docs/operators.md).  Two execution modes (see docs/architecture.md for
 the dispatch-timeline picture):
 
 * ``mode="stepped"`` (default) — one jit dispatch per frontier iteration,
@@ -30,10 +33,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fused as _fused
+from repro.core import operators
 from repro.core.graph import CSRGraph, INF
 from repro.core.strategies import (
-    EdgeBased, IterStats, NodeSplitting, StrategyBase, STRATEGIES,
-    make_strategy, register)
+    EdgeBased, FRONTIER_INIT, IterStats, NodeSplitting, StrategyBase,
+    STRATEGIES, make_strategy, register, strategy_capabilities)
 
 
 @dataclasses.dataclass
@@ -74,19 +78,31 @@ class RunResult:
         return self.edges_relaxed / self.total_seconds / 1e6
 
 
-def _ready(x):
+def ready(x):
+    """Block until ``x``'s device computations finish, then return it.
+
+    The public readiness helper for host-stepped drivers and examples —
+    use this instead of reaching for ``jax.block_until_ready`` (or the
+    old private ``engine._ready``) so timing loops across the repo block
+    the same way."""
     jax.block_until_ready(x)
     return x
 
 
+_ready = ready    # backwards-compat alias (pre-operator-API imports)
+
+
 def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         max_iterations: int = 100000, record_degrees: bool = False,
-        mode: str = "stepped") -> RunResult:
-    """Fixed-point driver.  ``graph.wt is None`` ⇒ BFS levels, else SSSP.
+        mode: str = "stepped", op="shortest_path") -> RunResult:
+    """Fixed-point driver.  With the default ``shortest_path`` operator,
+    ``graph.wt is None`` ⇒ BFS levels, else SSSP distances; any other
+    :class:`repro.core.operators.EdgeOp` (or registered name) swaps the
+    relax semantics without touching the schedule.
 
     ``mode="stepped"`` dispatches one jitted relax per frontier iteration
     and collects per-iteration stats; ``mode="fused"`` runs the whole
-    traversal as one on-device ``while_loop`` dispatch (same distances,
+    traversal as one on-device ``while_loop`` dispatch (same values,
     iteration count and edge total — see :mod:`repro.core.fused`).
     ``record_degrees`` needs the host in the loop, so it requires stepped
     mode."""
@@ -97,9 +113,11 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         raise ValueError(
             "record_degrees collects per-iteration host-side stats; "
             "use mode='stepped'")
+    op = operators.resolve(op)
     if graph.num_edges == 0:        # degenerate: nothing to relax
-        dist = np.full(graph.num_nodes, INF, np.int32)
-        dist[source] = 0
+        dist = np.full(graph.num_nodes, op.identity,
+                       np.dtype(op.dtype))
+        dist[source] = op.seed(source)
         return RunResult(dist=dist, iterations=0, total_seconds=0.0,
                          setup_seconds=0.0, kernel_seconds=0.0,
                          overhead_seconds=0.0, edges_relaxed=0,
@@ -115,13 +133,14 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
     else:
         n_alloc = graph.num_nodes
 
-    dist = jnp.full((n_alloc,), INF, jnp.int32).at[source].set(0)
+    dist = (jnp.full((n_alloc,), op.identity, op.dtype)
+            .at[source].set(op.seed(source)))
 
     if mode == "fused":
         mask = jnp.zeros((n_alloc,), jnp.bool_).at[source].set(True)
         t_start = time.perf_counter()
         dist, iterations, edges = _fused.run_fixed_point(
-            graph, state, strategy, dist, mask,
+            graph, state, strategy, dist, mask, op=op,
             max_iterations=max_iterations)
         total_s = time.perf_counter() - t_start
         if isinstance(strategy, NodeSplitting):
@@ -147,8 +166,8 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
             tk = time.perf_counter()
             relaxed = count          # worklist entries relaxed this round
             dist, new_mask, wl, count = strategy.relax_and_push(
-                state, dist, wl, count)
-            _ready(dist)
+                state, dist, wl, count, op=op)
+            ready(dist)
             kernel_s += time.perf_counter() - tk
             edges += relaxed
             iter_stats.append(IterStats(frontier_size=int(relaxed),
@@ -160,8 +179,9 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         while count > 0 and it < max_iterations:
             tk = time.perf_counter()
             dist, new_mask, stats = strategy.iterate(
-                state, dist, mask, count, record_degrees=record_degrees)
-            _ready(dist)
+                state, dist, mask, count, op=op,
+                record_degrees=record_degrees)
+            ready(dist)
             kernel_s += time.perf_counter() - tk
             iter_stats.append(stats)
             edges += stats.edges_processed
@@ -182,15 +202,67 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         state_bytes=strategy.state_bytes(state), mode="stepped")
 
 
+def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
+                op="shortest_path", mode: str = "stepped",
+                max_iterations: int = 100000):
+    """Run a strategy to its fixed point from a caller-supplied seeding.
+
+    The escape hatch under :func:`run` for algorithms whose initial state
+    is not "one source at distance zero": ``init(n_alloc)`` must return
+    the initial ``(values, frontier_mask)`` pair on the strategy's
+    allocation (``n_alloc`` is the split graph's node count for NS —
+    children may be seeded arbitrarily; the first ``ns_activate`` mirror
+    overwrites them with their parent's value).  ``connected_components``
+    seeds every node with its own label this way.
+
+    Requires a strategy with the :data:`repro.core.strategies.FRONTIER_INIT`
+    capability (EP's edge worklist cannot represent an arbitrary dense
+    frontier).  Returns ``(values, iterations, edges_relaxed)`` with
+    ``values`` a host array on the *original* node allocation."""
+    if mode not in ("stepped", "fused"):
+        raise ValueError(
+            f"mode must be 'stepped' or 'fused', got {mode!r}")
+    if FRONTIER_INIT not in strategy.capabilities:
+        raise ValueError(
+            f"strategy {strategy.name!r} does not declare the "
+            f"{FRONTIER_INIT!r} capability; seeding an arbitrary frontier "
+            f"needs a node strategy")
+    op = operators.resolve(op)
+    state = strategy.setup(graph)
+    if isinstance(strategy, NodeSplitting):
+        n_alloc = strategy.split_info.graph.num_nodes
+    else:
+        n_alloc = graph.num_nodes
+    dist, mask = init(n_alloc)
+
+    if mode == "fused":
+        dist, it, edges = _fused.run_fixed_point(
+            graph, state, strategy, dist, mask, op=op,
+            max_iterations=max_iterations)
+    else:
+        count, it, edges = int(jnp.sum(mask)), 0, 0
+        while count > 0 and it < max_iterations:
+            dist, mask, stats = strategy.iterate(state, dist, mask, count,
+                                                 op=op)
+            ready(dist)
+            edges += stats.edges_processed
+            count = int(jnp.sum(mask))
+            it += 1
+    if isinstance(strategy, NodeSplitting):
+        dist = strategy.split_info.extract_original(dist)
+    return np.asarray(dist), it, edges
+
+
 def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
-              mode: str = "stepped"):
+              mode: str = "stepped", op="shortest_path"):
     """Run K sources concurrently against one graph (dist is ``[K, N]``).
 
     Thin wrapper over :func:`repro.core.multi_source.run_batch`; kept here
     so single-source and batched entry points live side by side."""
     from repro.core import multi_source
     return multi_source.run_batch(graph, sources,
-                                  max_iterations=max_iterations, mode=mode)
+                                  max_iterations=max_iterations, mode=mode,
+                                  op=op)
 
 
 def reference_distances(graph: CSRGraph, source: int) -> np.ndarray:

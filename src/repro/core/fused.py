@@ -7,10 +7,12 @@ re-dispatch a freshly specialized kernel.  On small frontiers that
 dispatch latency — not relax work — dominates measured MTEPS, muddying the
 kernel-vs-overhead split the paper's Fig. 8–11 analysis depends on.
 
-This module runs an **entire** BFS/SSSP/CC traversal as a single
-``jax.lax.while_loop`` dispatch, the way Gunrock-style frameworks and the
-GPU load-balancing programming model of Osama et al. (arXiv:2301.04792)
-fuse the traversal into one device-resident loop:
+This module runs an **entire** traversal — any
+:class:`repro.core.operators.EdgeOp` semantics: BFS/SSSP, CC min-labels,
+widest paths, additive propagation — as a single ``jax.lax.while_loop``
+dispatch, the way Gunrock-style frameworks and the GPU load-balancing
+programming model of Osama et al. (arXiv:2301.04792) fuse the traversal
+into one device-resident loop:
 
 * the frontier is a dense ``[N]`` boolean mask — no host compaction, no
   per-iteration capacity bucketing.  Work lanes are capacity-padded to the
@@ -74,7 +76,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import operators
 from repro.core.graph import CSRGraph
+from repro.core.operators import EdgeOp
 from repro.core.strategies import (
     AdaptiveStrategy, EdgeBased, HierarchicalProcessing, NodeBased,
     NodeSplitting, WorkloadDecomposition, _apply_relax, _edge_weight)
@@ -113,7 +117,8 @@ def _limb_add(hi, lo, e):
     return hi + e_hi + lo // _LIMB, lo % _LIMB
 
 
-def _merge_path_relax(g: CSRGraph, dist, updated, work, cursor=None):
+def _merge_path_relax(g: CSRGraph, dist, updated, work, cursor=None, *,
+                      op: EdgeOp = operators.shortest_path):
     """One synchronous merge-path relax over ``E`` edge lanes.
 
     ``work[n]`` is how many edges node ``n`` contributes; each lane
@@ -132,11 +137,13 @@ def _merge_path_relax(g: CSRGraph, dist, updated, work, cursor=None):
     eidx = jnp.clip(start + local, 0, g.num_edges - 1)
     valid = k < total
     dist, updated, _ = _apply_relax(
-        dist, updated, node, g.col[eidx], _edge_weight(g, eidx), valid)
+        dist, updated, node, g.col[eidx], _edge_weight(g, eidx), valid,
+        op=op)
     return dist, updated, total
 
 
-def _bs_step(g: CSRGraph, dist, mask):
+def _bs_step(g: CSRGraph, dist, mask, *,
+             op: EdgeOp = operators.shortest_path):
     """Dense BS: every node lane walks its own adjacency list in lockstep.
 
     Column ``d`` relaxes the ``d``-th edge of every frontier node — the
@@ -156,7 +163,8 @@ def _bs_step(g: CSRGraph, dist, mask):
         valid = mask & (d < deg)
         eidx = jnp.clip(base + d, 0, g.num_edges - 1)
         dist, updated, _ = _apply_relax(
-            dist, updated, nodes, g.col[eidx], _edge_weight(g, eidx), valid)
+            dist, updated, nodes, g.col[eidx], _edge_weight(g, eidx), valid,
+            op=op)
         return d + 1, dist, updated
 
     _, dist, updated = lax.while_loop(cond, body,
@@ -164,18 +172,20 @@ def _bs_step(g: CSRGraph, dist, mask):
     return dist, updated, jnp.sum(deg)
 
 
-def _wd_step(g: CSRGraph, dist, mask):
+def _wd_step(g: CSRGraph, dist, mask, *,
+             op: EdgeOp = operators.shortest_path):
     """Dense WD: merge-path over the frontier's edges, ``E`` lanes.
 
     One synchronous ``_merge_path_relax`` over the masked degrees — same
     snapshot semantics as ``wd_relax``."""
     deg = _masked_degrees(g, mask)
     updated = jnp.zeros_like(mask)
-    dist, updated, total = _merge_path_relax(g, dist, updated, deg)
+    dist, updated, total = _merge_path_relax(g, dist, updated, deg, op=op)
     return dist, updated, total
 
 
-def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int):
+def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int,
+             op: EdgeOp = operators.shortest_path):
     """Dense HP: the stepped driver's hybrid, on device.
 
     ``count <= switch_threshold`` → straight WD (one synchronous pass);
@@ -190,7 +200,7 @@ def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int):
     nodes = jnp.arange(n, dtype=jnp.int32)
 
     def small(dist):
-        dist, updated, _ = _wd_step(g, dist, mask)
+        dist, updated, _ = _wd_step(g, dist, mask, op=op)
         return dist, updated
 
     def big(dist):
@@ -213,7 +223,7 @@ def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int):
             src = jnp.broadcast_to(nodes[:, None], (n, mdt)).reshape(-1)
             dist, updated, _ = _apply_relax(
                 dist, updated, src, g.col[eidx], _edge_weight(g, eidx),
-                valid.reshape(-1))
+                valid.reshape(-1), op=op)
             return i + 1, cursor + mdt, dist, updated
 
         i0 = jnp.int32(0)
@@ -225,14 +235,16 @@ def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int):
         # cursor-aware WD tail over the surviving sublist (≤ threshold
         # nodes, all remaining edges in one synchronous pass)
         rem = jnp.where(mask, jnp.maximum(deg - cursor, 0), 0)
-        dist, updated, _ = _merge_path_relax(g, dist, updated, rem, cursor)
+        dist, updated, _ = _merge_path_relax(g, dist, updated, rem, cursor,
+                                             op=op)
         return dist, updated
 
     dist, updated = lax.cond(count <= switch_threshold, small, big, dist)
     return dist, updated, jnp.sum(deg)
 
 
-def _ep_step(g: CSRGraph, edge_src, dist, mask):
+def _ep_step(g: CSRGraph, edge_src, dist, mask, *,
+             op: EdgeOp = operators.shortest_path):
     """Dense EP: all ``E`` edge lanes, valid where the source is live.
 
     The dense analogue of a chunked edge worklist — deduplicated by
@@ -241,21 +253,24 @@ def _ep_step(g: CSRGraph, edge_src, dist, mask):
     eidx = jnp.arange(g.num_edges, dtype=jnp.int32)
     updated = jnp.zeros_like(mask)
     dist, updated, _ = _apply_relax(
-        dist, updated, edge_src, g.col, _edge_weight(g, eidx), valid)
+        dist, updated, edge_src, g.col, _edge_weight(g, eidx), valid, op=op)
     return dist, updated, jnp.sum(valid.astype(jnp.int32))
 
 
-def _ns_step(g2: CSRGraph, child_parent, dist, mask):
+def _ns_step(g2: CSRGraph, child_parent, dist, mask, *,
+             op: EdgeOp = operators.shortest_path):
     """Dense NS: mirror parent attributes onto children (the
-    ``ns_activate`` pass), then dense BS on the split graph."""
-    dist = jnp.minimum(dist, dist[child_parent])
+    ``ns_activate`` gather — operator-generic, see strategies.py), then
+    dense BS on the split graph."""
+    dist = dist[child_parent]
     mask = mask | mask[child_parent]
-    return _bs_step(g2, dist, mask)
+    return _bs_step(g2, dist, mask, op=op)
 
 
 def _ad_step(g: CSRGraph, dist, mask, *, mdt: int, small_frontier: int,
              imbalance_threshold: float, hp_edges_threshold: int,
-             switch_threshold: int):
+             switch_threshold: int,
+             op: EdgeOp = operators.shortest_path):
     """On-device evaluation of ``choose_kernel``'s decision structure.
 
     Frontier statistics (count, degree sum, max degree, imbalance =
@@ -284,10 +299,10 @@ def _ad_step(g: CSRGraph, dist, mask, *, mdt: int, small_frontier: int,
 
     dist, updated, edges = lax.switch(
         idx,
-        [lambda d: _bs_step(g, d, mask),
-         lambda d: _wd_step(g, d, mask),
+        [lambda d: _bs_step(g, d, mask, op=op),
+         lambda d: _wd_step(g, d, mask, op=op),
          lambda d: _hp_step(g, d, mask, mdt=mdt,
-                            switch_threshold=switch_threshold)],
+                            switch_threshold=switch_threshold, op=op)],
         dist)
     return dist, updated, edges, idx
 
@@ -301,17 +316,19 @@ _AD_KERNEL_ORDER = ("BS", "WD", "HP")   # lax.switch branch order
 
 @partial(jax.jit, static_argnames=(
     "kernel", "max_iterations", "mdt", "small_frontier",
-    "imbalance_threshold", "hp_edges_threshold", "switch_threshold"))
+    "imbalance_threshold", "hp_edges_threshold", "switch_threshold", "op"))
 def _fixed_point(g: CSRGraph, aux, dist, mask, *, kernel: str,
                  max_iterations: int, mdt: int = 1,
                  small_frontier: int = 512,
                  imbalance_threshold: float = 4.0,
                  hp_edges_threshold: int = 1 << 15,
-                 switch_threshold: int = 1024):
+                 switch_threshold: int = 1024,
+                 op: EdgeOp = operators.shortest_path):
     """Whole traversal, one dispatch.
 
     ``aux`` is the kernel's side table: per-edge source ids for ``EP``,
-    the child→parent map for ``NS``, a 1-element dummy otherwise.  The
+    the child→parent map for ``NS``, a 1-element dummy otherwise.  ``op``
+    is the (static) edge operator defining the relax semantics.  The
     carry is ``(it, dist, mask, edges_hi, edges_lo, kernel_counts)`` —
     the edge total rides in a two-limb int32 accumulator (``_limb_add``)
     so it stays exact past 2^31; ``kernel_counts`` only moves for
@@ -332,22 +349,23 @@ def _fixed_point(g: CSRGraph, aux, dist, mask, *, kernel: str,
     def body(c):
         it, dist, mask, e_hi, e_lo, kcounts = c
         if kernel == "BS":
-            dist, new_mask, e = _bs_step(g, dist, mask)
+            dist, new_mask, e = _bs_step(g, dist, mask, op=op)
         elif kernel == "WD":
-            dist, new_mask, e = _wd_step(g, dist, mask)
+            dist, new_mask, e = _wd_step(g, dist, mask, op=op)
         elif kernel == "HP":
             dist, new_mask, e = _hp_step(
-                g, dist, mask, mdt=mdt, switch_threshold=switch_threshold)
+                g, dist, mask, mdt=mdt, switch_threshold=switch_threshold,
+                op=op)
         elif kernel == "EP":
-            dist, new_mask, e = _ep_step(g, aux, dist, mask)
+            dist, new_mask, e = _ep_step(g, aux, dist, mask, op=op)
         elif kernel == "NS":
-            dist, new_mask, e = _ns_step(g, aux, dist, mask)
+            dist, new_mask, e = _ns_step(g, aux, dist, mask, op=op)
         elif kernel == "AD":
             dist, new_mask, e, idx = _ad_step(
                 g, dist, mask, mdt=mdt, small_frontier=small_frontier,
                 imbalance_threshold=imbalance_threshold,
                 hp_edges_threshold=hp_edges_threshold,
-                switch_threshold=switch_threshold)
+                switch_threshold=switch_threshold, op=op)
             kcounts = kcounts.at[idx].add(1)
         else:  # pragma: no cover - guarded by _plan
             raise ValueError(f"unknown fused kernel {kernel!r}")
@@ -414,12 +432,14 @@ def _plan(strategy, state, graph: CSRGraph) -> FusedPlan:
 
 
 def run_fixed_point(graph: CSRGraph, state: Any, strategy, dist0, mask0, *,
+                    op: EdgeOp = operators.shortest_path,
                     max_iterations: int = 100000):
     """Run one strategy's whole traversal as a single fused dispatch.
 
-    ``dist0``/``mask0`` are the initial distance/frontier arrays on the
+    ``dist0``/``mask0`` are the initial value/frontier arrays on the
     strategy's allocation (the split graph's for NS) — callers own
-    seeding (single source, multi-source CC labels, ...) and extraction.
+    seeding (single source, multi-source CC labels, ...) and extraction;
+    ``op`` is the edge operator defining what the traversal computes.
     Returns ``(dist, iterations, edges_relaxed)`` with the first still on
     device; for AD the kernel tally is stored on the strategy as
     ``kernel_counts``, mirroring the stepped driver."""
@@ -428,7 +448,8 @@ def run_fixed_point(graph: CSRGraph, state: Any, strategy, dist0, mask0, *,
     aux = (jnp.zeros((1,), jnp.int32) if plan.aux is None else plan.aux)
     dist, it, e_hi, e_lo, kcounts = _fixed_point(
         plan.graph, aux, dist0, mask0, kernel=plan.kernel,
-        max_iterations=max_iterations, **plan.static)
+        max_iterations=max_iterations, op=operators.resolve(op),
+        **plan.static)
     jax.block_until_ready(dist)
     if plan.kernel == "AD":
         counts = [int(c) for c in kcounts]
@@ -441,9 +462,10 @@ def run_fixed_point(graph: CSRGraph, state: Any, strategy, dist0, mask0, *,
 # batched multi-source fixed point (K queries, zero host syncs)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("max_iterations",))
+@partial(jax.jit, static_argnames=("max_iterations", "op"))
 def _batch_fixed_point(g: CSRGraph, dist_b, mask_b, *,
-                       max_iterations: int):
+                       max_iterations: int,
+                       op: EdgeOp = operators.shortest_path):
     """All K queries to their fixed points in one dispatch.
 
     The dense WD step vmapped over the source axis inside one while_loop
@@ -460,7 +482,7 @@ def _batch_fixed_point(g: CSRGraph, dist_b, mask_b, *,
     def body(c):
         it, dist_b, mask_b, e_hi, e_lo = c
         dist_b, mask_b, e = jax.vmap(
-            lambda d, m: _wd_step(g, d, m))(dist_b, mask_b)
+            lambda d, m: _wd_step(g, d, m, op=op))(dist_b, mask_b)
         # fold the K per-row totals one _limb_add at a time (each row is
         # < 2^31, but even the per-row remainders could wrap a plain
         # int32 sum once K is large)
@@ -477,10 +499,12 @@ def _batch_fixed_point(g: CSRGraph, dist_b, mask_b, *,
 
 
 def run_batch_fixed_point(graph: CSRGraph, dist_b, mask_b, *,
+                          op: EdgeOp = operators.shortest_path,
                           max_iterations: int = 100000):
     """Host wrapper for :func:`_batch_fixed_point` (dispatch-counted)."""
     DISPATCH_COUNTS["batch"] += 1
     dist_b, it, e_hi, e_lo = _batch_fixed_point(
-        graph, dist_b, mask_b, max_iterations=max_iterations)
+        graph, dist_b, mask_b, max_iterations=max_iterations,
+        op=operators.resolve(op))
     jax.block_until_ready(dist_b)
     return dist_b, int(it), int(e_hi) * _LIMB + int(e_lo)

@@ -50,7 +50,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import CSRGraph, INF
+from repro.core import operators
+from repro.core.graph import CSRGraph
+from repro.core.operators import EdgeOp
 from repro.core.strategies import IterStats, wd_relax
 from repro.core.worklist import bucket, compact_mask
 
@@ -79,76 +81,88 @@ class BatchRunResult:
         return self.sources.shape[0] / self.total_seconds
 
 
-@partial(jax.jit, static_argnames=("cap", "cap_work"))
+@partial(jax.jit, static_argnames=("cap", "cap_work", "op"))
 def batched_wd_relax(g: CSRGraph, dist_b, mask_b, *, cap: int,
-                     cap_work: int):
+                     cap_work: int,
+                     op: EdgeOp = operators.shortest_path):
     """One relax iteration for all K sources: vmap of compact + WD relax.
 
     ``cap`` (frontier slots) and ``cap_work`` (edge lanes) are shared by
-    the whole batch — the largest per-source requirement, bucketed."""
+    the whole batch — the largest per-source requirement, bucketed.  The
+    edge operator rides into the vmapped body as a static closure, so all
+    K rows relax under identical semantics."""
     def one(dist, mask):
         frontier = compact_mask(mask, cap)
         cursor = jnp.zeros((cap,), jnp.int32)
-        return wd_relax(g, dist, frontier, cursor, cap_work=cap_work)
+        return wd_relax(g, dist, frontier, cursor, cap_work=cap_work, op=op)
 
     return jax.vmap(one)(dist_b, mask_b)
 
 
-@partial(jax.jit, static_argnames=("num_nodes",))
-def init_batch(num_nodes: int, sources: jax.Array):
-    """Initial ``[K, N]`` dist / frontier-mask for a batch of sources."""
+@partial(jax.jit, static_argnames=("num_nodes", "op"))
+def init_batch(num_nodes: int, sources: jax.Array,
+               op: EdgeOp = operators.shortest_path):
+    """Initial ``[K, N]`` values / frontier-mask for a batch of sources."""
     k = sources.shape[0]
     rows = jnp.arange(k)
-    dist = jnp.full((k, num_nodes), INF, jnp.int32).at[rows, sources].set(0)
+    dist = (jnp.full((k, num_nodes), op.identity, op.dtype)
+            .at[rows, sources].set(op.seed(sources)))
     mask = jnp.zeros((k, num_nodes), jnp.bool_).at[rows, sources].set(True)
     return dist, mask
 
 
-@jax.jit
-def refill_slot(dist_b, mask_b, slot: jax.Array, source: jax.Array):
-    """Admit a new query into row ``slot``: reset its dist row and seed its
+@partial(jax.jit, static_argnames=("op",))
+def refill_slot(dist_b, mask_b, slot: jax.Array, source: jax.Array,
+                op: EdgeOp = operators.shortest_path):
+    """Admit a new query into row ``slot``: reset its value row and seed its
     frontier at ``source``.  Other rows are untouched, so in-flight queries
     keep converging — continuous batching for graph queries."""
     n = dist_b.shape[1]
-    row = jnp.full((n,), INF, jnp.int32).at[source].set(0)
+    row = (jnp.full((n,), op.identity, op.dtype)
+           .at[source].set(op.seed(source)))
     frontier_row = jnp.zeros((n,), jnp.bool_).at[source].set(True)
     return dist_b.at[slot].set(row), mask_b.at[slot].set(frontier_row)
 
 
 def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
-              mode: str = "stepped") -> BatchRunResult:
+              mode: str = "stepped", op="shortest_path") -> BatchRunResult:
     """Fixed-point driver over K sources at once.
 
     Semantics match K independent ``engine.run`` calls exactly (same
-    scatter-min relax per source); only the batching differs.  ``graph.wt
-    is None`` ⇒ BFS levels, else SSSP distances.  ``mode="fused"`` runs
-    the whole batch in one device dispatch (see module docstring).
+    operator relax per source); only the batching differs.  With the
+    default ``shortest_path`` operator, ``graph.wt is None`` ⇒ BFS
+    levels, else SSSP distances; pass any
+    :class:`repro.core.operators.EdgeOp` (or registered name) as ``op``
+    for other semantics.  ``mode="fused"`` runs the whole batch in one
+    device dispatch (see module docstring).
     """
     if mode not in ("stepped", "fused"):
         raise ValueError(
             f"mode must be 'stepped' or 'fused', got {mode!r}")
+    op = operators.resolve(op)
+    np_dtype = np.dtype(op.dtype)
     sources = np.asarray(sources, np.int32)
     k = int(sources.shape[0])
     n = graph.num_nodes
     if k == 0:
-        return BatchRunResult(dist=np.zeros((0, n), np.int32),
+        return BatchRunResult(dist=np.zeros((0, n), np_dtype),
                               sources=sources, iterations=0,
                               total_seconds=0.0, edges_relaxed=0,
                               iter_stats=[], mode=mode)
     if graph.num_edges == 0:
-        dist = np.full((k, n), INF, np.int32)
-        dist[np.arange(k), sources] = 0
+        dist = np.full((k, n), op.identity, np_dtype)
+        dist[np.arange(k), sources] = op.seed(sources)
         return BatchRunResult(dist=dist, sources=sources, iterations=0,
                               total_seconds=0.0, edges_relaxed=0,
                               iter_stats=[], mode=mode)
 
     t0 = time.perf_counter()
-    dist_b, mask_b = init_batch(n, jnp.asarray(sources))
+    dist_b, mask_b = init_batch(n, jnp.asarray(sources), op=op)
 
     if mode == "fused":
         from repro.core import fused
         dist_b, iterations, edges = fused.run_batch_fixed_point(
-            graph, dist_b, mask_b, max_iterations=max_iterations)
+            graph, dist_b, mask_b, op=op, max_iterations=max_iterations)
         total_s = time.perf_counter() - t0
         return BatchRunResult(dist=np.asarray(dist_b), sources=sources,
                               iterations=iterations, total_seconds=total_s,
@@ -170,7 +184,7 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
         cap = bucket(widest)
         cap_work = bucket(int(totals.max()))
         dist_b, mask_b = batched_wd_relax(graph, dist_b, mask_b,
-                                          cap=cap, cap_work=cap_work)
+                                          cap=cap, cap_work=cap_work, op=op)
         jax.block_until_ready(dist_b)
         edges += int(totals.sum())
         iter_stats.append(IterStats(frontier_size=widest,

@@ -1,0 +1,217 @@
+"""Composable edge operators: algorithm *semantics* decoupled from
+load-balancing *schedules*.
+
+The paper's five strategies (BS/EP/WD/NS/HP, plus the adaptive AD) are
+schedules — they decide which lane relaxes which edge.  What that relax
+*means* is a separate, much smaller contract, and this module names it:
+an :class:`EdgeOp` is a per-edge message plus a commutative monoid that
+folds messages into the destination's value.  The strategy kernels in
+:mod:`repro.core.strategies` and the fused engine in
+:mod:`repro.core.fused` are parameterized over the operator, so every
+(operator × strategy × mode) combination works without touching a
+kernel — the factoring of Gunrock-style frameworks and the GPU
+load-balancing programming model of Osama et al. (arXiv:2301.04792).
+
+An operator is four pieces (see docs/operators.md for the full rules):
+
+* ``message(val_src, w)`` — the candidate value an edge ``(src, dst, w)``
+  proposes for ``dst``, computed from the source's current value;
+* ``combine`` — how candidates fold into ``dist[dst]``: one of the
+  monoids ``"min"`` / ``"max"`` / ``"add"`` with neutral element
+  ``identity`` (CUDA ``atomicMin``/``atomicMax``/``atomicAdd`` become
+  deterministic ``dist.at[dst].min/max/add`` scatters);
+* an update/activation predicate (:meth:`EdgeOp.improves`) — when a
+  candidate counts as progress and puts ``dst`` on the next frontier.
+  Defaults to strict improvement for ``min``/``max`` and to "non-neutral
+  contribution" for ``add``; override via the ``update`` field;
+* ``dtype`` — the value array's element type (int32 throughout the
+  built-ins; the engine allocates ``dist`` with it).
+
+Fused-safety contract (the operator runs *inside* ``jit`` and
+``lax.while_loop``): ``message`` and ``update`` must be pure
+``jnp``-traceable functions of their array arguments — no host syncs, no
+data-dependent Python control flow, no shape changes.  Operators are
+passed as *static* jit arguments, so reuse module-level instances (each
+fresh ``EdgeOp`` with fresh lambdas retriggers compilation).
+
+Convergence: the engine iterates until the frontier empties.  For
+idempotent monotone monoids (``min``/``max`` with strict-improvement
+activation) any relax order reaches the unique fixed point, so every
+schedule — and both execution modes — agree.  ``add`` is not idempotent:
+:data:`reach_count` is exact only on graphs where re-activation cannot
+happen, i.e. *level-layered DAGs* (every edge spans consecutive BFS
+levels — each node then receives all contributions in one iteration and
+fires exactly once).  On other graphs additive propagation still runs
+bit-identically in both modes, but the values it converges to (or
+whether it converges before ``max_iterations``) is the algorithm
+author's responsibility, exactly as in the GPU frameworks this mirrors.
+
+Built-ins:
+
+=================  =======  ========  =============================  ======================
+operator           combine  identity  message(v, w)                  computes
+=================  =======  ========  =============================  ======================
+``shortest_path``  min      INF       ``v + w``                      SSSP / BFS levels
+``min_label``      min      INF       ``v``                          CC labels (weights
+                                                                     ignored — no more
+                                                                     zero-weight graph copy)
+``widest_path``    max      0         ``min(v, w)``                  max-min bottleneck
+                                                                     bandwidth
+``reach_count``    add      0         ``v``                          path counts on layered
+                                                                     DAGs (σ-style)
+=================  =======  ========  =============================  ======================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import INF
+
+_COMBINES = ("min", "max", "add")
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeOp:
+    """One relax-style algorithm, expressed as message + monoid.
+
+    Frozen (hashable) so instances can ride through ``jit`` as static
+    arguments; define operators once at module level and reuse them.
+    """
+
+    name: str
+    #: the fold monoid: "min" | "max" | "add"
+    combine: str
+    #: neutral element of ``combine``; also the "unreached" value the
+    #: engine fills fresh ``dist`` arrays with
+    identity: int
+    #: value seeded at an active source node; ``None`` means "the node's
+    #: own id" (label-propagation operators) — see :meth:`seed`
+    source_value: Optional[int]
+    #: ``(val_src, w) -> candidate`` — pure jnp, fused-safe
+    message: Callable[[jax.Array, jax.Array], jax.Array]
+    #: optional activation override: ``(candidate, current) -> bool``.
+    #: Default is strict improvement (min: ``<``, max: ``>``) or, for
+    #: add, "candidate differs from the neutral element".
+    update: Optional[Callable[[jax.Array, jax.Array], jax.Array]] = None
+    dtype: Any = jnp.int32
+
+    def __post_init__(self):
+        if self.combine not in _COMBINES:
+            raise ValueError(
+                f"combine must be one of {_COMBINES}, got {self.combine!r}")
+
+    # -- the three hooks the kernels call (all fused-safe) ----------------
+
+    def improves(self, cand: jax.Array, cur: jax.Array) -> jax.Array:
+        """Does ``cand`` constitute progress over ``cur`` (activate dst)?"""
+        if self.update is not None:
+            return self.update(cand, cur)
+        if self.combine == "min":
+            return cand < cur
+        if self.combine == "max":
+            return cand > cur
+        return cand != self.identity          # add: any real contribution
+
+    def scatter(self, dist: jax.Array, dst: jax.Array, cand: jax.Array,
+                improve: jax.Array) -> jax.Array:
+        """Fold candidates into ``dist[dst]`` — the deterministic stand-in
+        for the CUDA atomic.  Masked lanes contribute ``identity``, which
+        is neutral for the monoid, so clipped/padded lanes are no-ops."""
+        vals = jnp.where(improve, cand,
+                         jnp.asarray(self.identity, self.dtype))
+        if self.combine == "min":
+            return dist.at[dst].min(vals)
+        if self.combine == "max":
+            return dist.at[dst].max(vals)
+        return dist.at[dst].add(vals)
+
+    def seed(self, source):
+        """Initial value planted at an active source (host or traced)."""
+        if self.source_value is None:
+            return source
+        return self.source_value
+
+    @property
+    def idempotent(self) -> bool:
+        """Idempotent monoids (min/max) reach the same fixed point under
+        any relax order; ``add`` needs single-fire propagation (layered
+        DAGs) to be meaningful."""
+        return self.combine in ("min", "max")
+
+
+# ---------------------------------------------------------------------------
+# built-in operator instances (module-level: stable jit cache keys)
+# ---------------------------------------------------------------------------
+
+def _sum_message(v, w):
+    return v + w
+
+
+def _copy_message(v, w):
+    return v
+
+
+def _bottleneck_message(v, w):
+    return jnp.minimum(v, w)
+
+
+#: SSSP distances on weighted graphs, BFS levels on unweighted ones
+#: (``min`` distributes over ``+w`` — the paper's §II-B distributivity).
+shortest_path = EdgeOp(
+    name="shortest_path", combine="min", identity=INF, source_value=0,
+    message=_sum_message)
+
+#: min-label propagation: every active node pushes its label; the fixed
+#: point labels each node with the min id that reaches it.  Weights are
+#: ignored, so CC no longer needs a zero-weight copy of the graph.
+min_label = EdgeOp(
+    name="min_label", combine="min", identity=INF, source_value=None,
+    message=_copy_message)
+
+#: maximum bottleneck bandwidth: a path's capacity is its thinnest edge;
+#: keep the best capacity over all paths.  Sources start unbounded (INF);
+#: unreachable nodes keep capacity 0 (the identity of max).
+widest_path = EdgeOp(
+    name="widest_path", combine="max", identity=0, source_value=INF,
+    message=_bottleneck_message)
+
+#: additive propagation: every firing node adds its count downstream.
+#: Exact source→node path counts on level-layered DAGs (each node fires
+#: exactly once); see the module docstring for the convergence contract.
+reach_count = EdgeOp(
+    name="reach_count", combine="add", identity=0, source_value=1,
+    message=_copy_message)
+
+
+#: name -> operator.  Extended via :func:`register_operator`; resolved by
+#: :func:`resolve` wherever the engine accepts ``op=`` by name.
+OPERATORS: dict[str, EdgeOp] = {
+    op.name: op
+    for op in (shortest_path, min_label, widest_path, reach_count)
+}
+
+
+def register_operator(op: EdgeOp) -> EdgeOp:
+    """Add a user-defined operator to :data:`OPERATORS` (name must be new)."""
+    if not isinstance(op, EdgeOp):
+        raise TypeError(f"{op!r} is not an EdgeOp")
+    if op.name in OPERATORS:
+        raise ValueError(f"operator {op.name!r} already registered")
+    OPERATORS[op.name] = op
+    return op
+
+
+def resolve(op) -> EdgeOp:
+    """Accept an :class:`EdgeOp` or a registered name, return the EdgeOp."""
+    if isinstance(op, EdgeOp):
+        return op
+    try:
+        return OPERATORS[op]
+    except (KeyError, TypeError):
+        raise KeyError(f"unknown operator {op!r}; registered: "
+                       f"{sorted(OPERATORS)}") from None

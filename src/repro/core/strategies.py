@@ -14,7 +14,16 @@ AD  (adaptive)  per-iteration choice of BS/WD/HP CSR
                 from frontier statistics (arXiv:1911.09135)
 
 Strategies live in the :data:`STRATEGIES` registry; new ones are added with
-the :func:`register` decorator and instantiated via :func:`make_strategy`.
+the :func:`register` decorator (which also records the strategy's declared
+*capabilities*, e.g. :data:`FRONTIER_INIT`) and instantiated via
+:func:`make_strategy`.
+
+Every kernel and driver here is parameterized over an
+:class:`repro.core.operators.EdgeOp` — the per-edge message + combine
+monoid that gives the relax its meaning (SSSP, CC labels, widest path,
+...).  Strategies schedule the work; the operator defines it.  The
+default everywhere is ``operators.shortest_path``, which reproduces the
+paper's BFS/SSSP semantics bit-for-bit.
 
 Two kinds of code live here — keep them apart (docs/architecture.md):
 
@@ -32,7 +41,7 @@ Two kinds of code live here — keep them apart (docs/architecture.md):
   exists to remove.
 
 CUDA-thread semantics map to dense vectorized batches:
-  * atomicMin(dist[d], alt)  →  dist.at[d].min(alt)        (scatter-min)
+  * atomicMin/Max/Add        →  dist.at[d].min/max/add     (op.scatter)
   * worklist push w/chunking →  flag → cumsum → run_fill   (1 slot/node)
   * Thrust inclusive_scan    →  jnp.cumsum
   * find_offsets kernel      →  vectorized searchsorted (merge-path); the
@@ -53,8 +62,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import node_split
-from repro.core.graph import CSRGraph, COOGraph, INF
+from repro.core import node_split, operators
+from repro.core.graph import CSRGraph, COOGraph
+from repro.core.operators import EdgeOp
 from repro.core.worklist import bucket, compact_mask, run_fill
 
 try:  # optional Pallas fast path for the WD offset search
@@ -64,7 +74,7 @@ except Exception:  # pragma: no cover - kernels are optional at import time
 
 
 # ---------------------------------------------------------------------------
-# shared relax primitive: dist[dst] = min(dist[dst], dist[src] + w)
+# shared relax primitive: dist[dst] = combine(dist[dst], message(dist[src], w))
 # ---------------------------------------------------------------------------
 
 def _edge_weight(g, eidx: jax.Array) -> jax.Array:
@@ -73,15 +83,20 @@ def _edge_weight(g, eidx: jax.Array) -> jax.Array:
     return jnp.ones(eidx.shape, jnp.int32)
 
 
-def _apply_relax(dist, updated, src, dst, w, valid):
-    """Vectorized relax over a batch of (src, dst, w) with a validity mask.
+def _apply_relax(dist, updated, src, dst, w, valid, *,
+                 op: EdgeOp = operators.shortest_path):
+    """Vectorized operator relax over a batch of (src, dst, w) with a
+    validity mask: candidates from ``op.message``, folded by
+    ``op.scatter`` (the deterministic stand-in for the CUDA atomic), with
+    ``op.improves`` deciding which destinations join the next frontier.
 
-    Deterministic scatter-min replaces CUDA atomicMin."""
+    With the default ``shortest_path`` operator this is exactly
+    ``dist[dst] = min(dist[dst], dist[src] + w)``."""
     src_c = jnp.clip(src, 0, dist.shape[0] - 1)
     dst_c = jnp.clip(dst, 0, dist.shape[0] - 1)
-    alt = dist[src_c] + w
-    improve = valid & (alt < dist[dst_c])
-    dist = dist.at[dst_c].min(jnp.where(improve, alt, INF))
+    cand = op.message(dist[src_c], w)
+    improve = valid & op.improves(cand, dist[dst_c])
+    dist = op.scatter(dist, dst_c, cand, improve)
     updated = updated.at[dst_c].max(improve)
     return dist, updated, improve
 
@@ -90,8 +105,9 @@ def _apply_relax(dist, updated, src, dst, w, valid):
 # BS — node-based baseline (LonestarGPU-style)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap",))
-def bs_relax(g: CSRGraph, dist, frontier, *, cap: int):
+@partial(jax.jit, static_argnames=("cap", "op"))
+def bs_relax(g: CSRGraph, dist, frontier, *, cap: int,
+             op: EdgeOp = operators.shortest_path):
     """Each frontier slot ("thread") walks its own adjacency list.
 
     The walk runs for max-degree-in-frontier steps with lanes masked once
@@ -113,7 +129,8 @@ def bs_relax(g: CSRGraph, dist, frontier, *, cap: int):
         valid = mask & (d < deg)
         eidx = jnp.clip(base + d, 0, g.num_edges - 1)
         dist, updated, _ = _apply_relax(
-            dist, updated, f, g.col[eidx], _edge_weight(g, eidx), valid)
+            dist, updated, f, g.col[eidx], _edge_weight(g, eidx), valid,
+            op=op)
         return d + 1, dist, updated
 
     _, dist, updated = jax.lax.while_loop(
@@ -125,8 +142,9 @@ def bs_relax(g: CSRGraph, dist, frontier, *, cap: int):
 # EP — edge-based parallelism over a COO edge worklist
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap",))
-def ep_relax(coo: COOGraph, dist, edge_wl, *, cap: int):
+@partial(jax.jit, static_argnames=("cap", "op"))
+def ep_relax(coo: COOGraph, dist, edge_wl, *, cap: int,
+             op: EdgeOp = operators.shortest_path):
     """One lane per worklist edge — near-perfect balance (paper §II-B)."""
     del cap
     mask = edge_wl >= 0
@@ -134,7 +152,8 @@ def ep_relax(coo: COOGraph, dist, edge_wl, *, cap: int):
     src, dst = coo.src[e], coo.dst[e]
     w = _edge_weight(coo, e)
     updated = jnp.zeros((dist.shape[0],), jnp.bool_)
-    dist, updated, improve = _apply_relax(dist, updated, src, dst, w, mask)
+    dist, updated, improve = _apply_relax(dist, updated, src, dst, w, mask,
+                                          op=op)
     return dist, updated, improve, dst
 
 
@@ -166,9 +185,10 @@ def ep_push_unchunked(row_ptr, improve, dst, total, *, cap_out: int):
 # WD — workload decomposition (merge-path over the frontier's edges)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap_work", "use_pallas"))
+@partial(jax.jit, static_argnames=("cap_work", "use_pallas", "op"))
 def wd_relax(g: CSRGraph, dist, frontier, cursor, *, cap_work: int,
-             use_pallas: bool = False):
+             use_pallas: bool = False,
+             op: EdgeOp = operators.shortest_path):
     """Block-distribute the frontier's edges across ``cap_work`` lanes.
 
     prefix-sum over (remaining) frontier degrees, then every work item k
@@ -195,7 +215,8 @@ def wd_relax(g: CSRGraph, dist, frontier, cursor, *, cap_work: int,
     valid = k < total
     updated = jnp.zeros((dist.shape[0],), jnp.bool_)
     dist, updated, _ = _apply_relax(
-        dist, updated, src, g.col[eidx], _edge_weight(g, eidx), valid)
+        dist, updated, src, g.col[eidx], _edge_weight(g, eidx), valid,
+        op=op)
     return dist, updated
 
 
@@ -208,8 +229,15 @@ def ns_activate(dist2, mask2, child_parent):
     """Reflect parent attributes onto children (paper §III-B) and activate
     children alongside their parent — children share the parent's outgoing
     edges, so whenever the parent has work, so do they.  This extra
-    gather/compare pass is the 'extra atomics' cost of NS."""
-    dist2 = jnp.minimum(dist2, dist2[child_parent])
+    gather pass is the 'extra atomics' cost of NS.
+
+    The mirror is a straight gather of the parent's value, which is
+    operator-generic: children receive no in-edges (destinations in the
+    split graph are always parent ids), so a child's value is *only* ever
+    the parent's — for min/max operators the gather coincides with the
+    old ``combine(child, parent)`` fold, and for additive operators it is
+    the only correct choice (a fold would double-count)."""
+    dist2 = dist2[child_parent]
     mask2 = mask2 | mask2[child_parent]
     return dist2, mask2
 
@@ -218,8 +246,9 @@ def ns_activate(dist2, mask2, child_parent):
 # HP — hierarchical processing (≤ MDT edges per node per sub-iteration)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap", "mdt"))
-def hp_sub_relax(g: CSRGraph, dist, sub, cursor, *, cap: int, mdt: int):
+@partial(jax.jit, static_argnames=("cap", "mdt", "op"))
+def hp_sub_relax(g: CSRGraph, dist, sub, cursor, *, cap: int, mdt: int,
+                 op: EdgeOp = operators.shortest_path):
     """One sub-iteration: every sublist node processes its next ≤MDT edges
     (a dense [cap, MDT] tile — all lanes bounded by MDT, i.e. balanced
     within the threshold, §III-C).  Returns the surviving sublist mask."""
@@ -235,7 +264,7 @@ def hp_sub_relax(g: CSRGraph, dist, sub, cursor, *, cap: int, mdt: int):
     updated = jnp.zeros((dist.shape[0],), jnp.bool_)
     dist, updated, _ = _apply_relax(
         dist, updated, src, g.col[eidx.reshape(-1)],
-        _edge_weight(g, eidx.reshape(-1)), valid.reshape(-1))
+        _edge_weight(g, eidx.reshape(-1)), valid.reshape(-1), op=op)
     new_cursor = cursor + mdt
     alive = mask & (new_cursor < deg)
     return dist, updated, new_cursor, alive
@@ -264,16 +293,35 @@ class IterStats:
     kernel: Optional[str] = None     # relax kernel used (AD records choices)
 
 
+#: capability: the strategy can start from an arbitrary dense
+#: (dist, frontier-mask) pair — multi-source seeding, CC's
+#: every-node-active init, engine.fixed_point.  Node strategies have it;
+#: EP does not (its state is an edge worklist derived from one source).
+FRONTIER_INIT = "frontier_init"
+
+#: capabilities a plain StrategyBase subclass declares unless it says
+#: otherwise at registration (or via a ``capabilities`` class attribute)
+DEFAULT_CAPABILITIES = frozenset({FRONTIER_INIT})
+
+
 class StrategyBase:
     """A strategy = host preprocessing + one frontier-relax iteration.
 
     ``setup`` and ``iterate`` are host-stepped entry points (they may
     sync device values); the jitted kernels they dispatch are the
-    fused-safe parts.  A strategy additionally gains ``mode="fused"``
-    support by having a dense-mask lowering mapped in
-    ``repro.core.fused._plan``."""
+    fused-safe parts.  ``iterate`` receives the :class:`EdgeOp` defining
+    the relax semantics (``op``) and must thread it to every kernel it
+    dispatches.  A strategy additionally gains ``mode="fused"`` support
+    by having a dense-mask lowering mapped in ``repro.core.fused._plan``,
+    and declares what callers may assume about it through its
+    ``capabilities`` set (see :data:`FRONTIER_INIT` and
+    :func:`register`)."""
 
     name = "base"
+    #: declared capability flags; third-party strategies override this in
+    #: the class body or via ``register(capabilities=...)``
+    capabilities: frozenset = DEFAULT_CAPABILITIES
+
     #: peak auxiliary device bytes (graph copies etc.) — feeds the paper's
     #: memory-requirement axis (Fig. 9)
     def setup(self, graph: CSRGraph) -> Any:
@@ -283,18 +331,29 @@ class StrategyBase:
         return state.device_bytes()
 
     def iterate(self, state, dist, updated_mask, count, *,
+                op: EdgeOp = operators.shortest_path,
                 record_degrees=False):
         raise NotImplementedError
 
 
 #: name -> strategy class.  Populated by :func:`register`; drivers resolve
-#: user-facing strategy names ("BS", ..., "AD") through this table.
+#: user-facing strategy names ("BS", ..., "AD") through this table, and
+#: algorithms gate on the class's declared ``capabilities`` (via
+#: :func:`strategy_capabilities`) instead of isinstance checks, so
+#: third-party registrations compose.
 STRATEGIES: dict[str, type] = {}
 
 
-def register(cls=None, *, name: Optional[str] = None):
+def register(cls=None, *, name: Optional[str] = None,
+             capabilities: Optional[frozenset] = None):
     """Class decorator adding a :class:`StrategyBase` subclass to the
-    registry under ``name`` (default: the class's ``name`` attribute)."""
+    registry under ``name`` (default: the class's ``name`` attribute).
+
+    ``capabilities`` declares what callers may assume about the strategy
+    (e.g. :data:`FRONTIER_INIT`); when omitted, the class's
+    ``capabilities`` attribute wins — *including inherited ones*, so a
+    subclass of a restricted strategy (e.g. a tuned EP variant) stays
+    restricted unless it explicitly re-declares."""
     def _register(c):
         if not (isinstance(c, type) and issubclass(c, StrategyBase)):
             raise TypeError(f"{c!r} is not a StrategyBase subclass")
@@ -302,6 +361,10 @@ def register(cls=None, *, name: Optional[str] = None):
         if key in STRATEGIES:
             raise ValueError(f"strategy {key!r} already registered "
                              f"({STRATEGIES[key]!r})")
+        caps = capabilities
+        if caps is None:
+            caps = getattr(c, "capabilities", DEFAULT_CAPABILITIES)
+        c.capabilities = frozenset(caps)
         STRATEGIES[key] = c
         return c
     return _register(cls) if cls is not None else _register
@@ -317,22 +380,38 @@ def make_strategy(name: str, **kwargs) -> StrategyBase:
     return cls(**kwargs)
 
 
+def strategy_capabilities(name: str) -> frozenset:
+    """Declared capability flags of a registered strategy."""
+    try:
+        cls = STRATEGIES[name]
+    except KeyError:
+        raise KeyError(f"unknown strategy {name!r}; registered: "
+                       f"{sorted(STRATEGIES)}") from None
+    return cls.capabilities
+
+
 @register
 class NodeBased(StrategyBase):
     name = "BS"
 
-    def iterate(self, g, dist, updated_mask, count, *, record_degrees=False):
+    def iterate(self, g, dist, updated_mask, count, *,
+                op: EdgeOp = operators.shortest_path, record_degrees=False):
         cap = bucket(count)
         frontier = compact_mask(updated_mask, cap)
         stats = _frontier_stats(g, frontier, count, record_degrees)
-        dist, new_mask = bs_relax(g, dist, frontier, cap=cap)
+        dist, new_mask = bs_relax(g, dist, frontier, cap=cap, op=op)
         return dist, new_mask, stats
 
 
 @register
 class EdgeBased(StrategyBase):
-    """EP.  State = COO graph (+ the 2E/3E memory bill) + edge worklist."""
+    """EP.  State = COO graph (+ the 2E/3E memory bill) + edge worklist.
+
+    No :data:`FRONTIER_INIT`: the worklist is seeded from one source's
+    adjacency run, so algorithms needing an arbitrary initial frontier
+    (CC's all-nodes-active seeding) must pick a node strategy."""
     name = "EP"
+    capabilities = frozenset()
 
     def __init__(self, chunked: bool = True, wl_capacity_factor: float = 4.0,
                  memory_budget_bytes: Optional[int] = None):
@@ -360,9 +439,11 @@ class EdgeBased(StrategyBase):
         wl[:deg] = np.arange(start, start + deg, dtype=np.int32)
         return jnp.asarray(wl), deg
 
-    def relax_and_push(self, coo, dist, edge_wl, count):
+    def relax_and_push(self, coo, dist, edge_wl, count, *,
+                       op: EdgeOp = operators.shortest_path):
         cap = edge_wl.shape[0]
-        dist, new_mask, improve, dst = ep_relax(coo, dist, edge_wl, cap=cap)
+        dist, new_mask, improve, dst = ep_relax(coo, dist, edge_wl, cap=cap,
+                                                op=op)
         if self.chunked:
             nodes_np = np.asarray(new_mask)
             total = int(self._degrees[nodes_np].sum())
@@ -401,7 +482,8 @@ class WorkloadDecomposition(StrategyBase):
         self._degrees = np.asarray(graph.degrees)
         return graph
 
-    def iterate(self, g, dist, updated_mask, count, *, record_degrees=False,
+    def iterate(self, g, dist, updated_mask, count, *,
+                op: EdgeOp = operators.shortest_path, record_degrees=False,
                 edge_total=None):
         cap = bucket(count)
         frontier = compact_mask(updated_mask, cap)
@@ -414,7 +496,7 @@ class WorkloadDecomposition(StrategyBase):
         cursor = jnp.zeros((cap,), jnp.int32)
         dist, new_mask = wd_relax(g, dist, frontier, cursor,
                                   cap_work=bucket(total),
-                                  use_pallas=self.use_pallas)
+                                  use_pallas=self.use_pallas, op=op)
         stats.edges_processed = total
         return dist, new_mask, stats
 
@@ -434,7 +516,8 @@ class NodeSplitting(StrategyBase):
         self.split_info = node_split.split_graph(graph, mdt)
         return self.split_info
 
-    def iterate(self, sg, dist, updated_mask, count, *, record_degrees=False):
+    def iterate(self, sg, dist, updated_mask, count, *,
+                op: EdgeOp = operators.shortest_path, record_degrees=False):
         g2 = sg.graph
         # mirror parent dist onto children + co-activate children
         dist, mask2 = ns_activate(dist, updated_mask, sg.child_parent)
@@ -442,7 +525,7 @@ class NodeSplitting(StrategyBase):
         cap = bucket(count2)
         frontier = compact_mask(mask2, cap)
         stats = _frontier_stats(g2, frontier, count2, record_degrees)
-        dist, new_mask = bs_relax(g2, dist, frontier, cap=cap)
+        dist, new_mask = bs_relax(g2, dist, frontier, cap=cap, op=op)
         return dist, new_mask, stats
 
     def state_bytes(self, sg):
@@ -468,7 +551,8 @@ class HierarchicalProcessing(StrategyBase):
         self._wd.setup(graph)
         return graph
 
-    def iterate(self, g, dist, updated_mask, count, *, record_degrees=False):
+    def iterate(self, g, dist, updated_mask, count, *,
+                op: EdgeOp = operators.shortest_path, record_degrees=False):
         cap = bucket(count)
         frontier = compact_mask(updated_mask, cap)
         stats = _frontier_stats(g, frontier, count, record_degrees)
@@ -478,7 +562,7 @@ class HierarchicalProcessing(StrategyBase):
         # Hybrid: small super list -> straight WD (paper §III-C)
         if count <= self.switch_threshold:
             dist, new_mask, sub_stats = self._wd.iterate(
-                g, dist, updated_mask, count)
+                g, dist, updated_mask, count, op=op)
             stats.edges_processed = sub_stats.edges_processed
             return dist, new_mask, stats
 
@@ -487,7 +571,7 @@ class HierarchicalProcessing(StrategyBase):
         subiters = 0
         while live > self.switch_threshold:
             dist, upd, cursor, alive = hp_sub_relax(
-                g, dist, sub, cursor, cap=sub.shape[0], mdt=mdt)
+                g, dist, sub, cursor, cap=sub.shape[0], mdt=mdt, op=op)
             acc_mask = acc_mask | upd
             live = int(jnp.sum(alive))
             subiters += 1
@@ -503,7 +587,7 @@ class HierarchicalProcessing(StrategyBase):
             total = int(np.maximum(rem, 0).sum())
             if total > 0:
                 dist, upd = wd_relax(g, dist, sub, cursor,
-                                     cap_work=bucket(total))
+                                     cap_work=bucket(total), op=op)
                 acc_mask = acc_mask | upd
             subiters += 1
         stats.sub_iterations = subiters
@@ -607,7 +691,8 @@ class AdaptiveStrategy(StrategyBase):
         self.kernel_counts = {}
         return graph
 
-    def iterate(self, g, dist, updated_mask, count, *, record_degrees=False):
+    def iterate(self, g, dist, updated_mask, count, *,
+                op: EdgeOp = operators.shortest_path, record_degrees=False):
         # host-stepped: the mask sync below is the price of host-side
         # statistics.  The fused AD (repro.core.fused._ad_step) computes
         # the same statistics on device — mean/imbalance deliberately in
@@ -628,8 +713,8 @@ class AdaptiveStrategy(StrategyBase):
         self.kernel_counts[choice] = self.kernel_counts.get(choice, 0) + 1
         extra = {"edge_total": degree_sum} if choice == "WD" else {}
         dist, new_mask, stats = self._kernels[choice].iterate(
-            g, dist, updated_mask, count, record_degrees=record_degrees,
-            **extra)
+            g, dist, updated_mask, count, op=op,
+            record_degrees=record_degrees, **extra)
         stats.kernel = choice
         if stats.edges_processed == 0:
             stats.edges_processed = degree_sum

@@ -1,0 +1,325 @@
+"""Tests for the composable edge-operator API (``repro.core.operators``).
+
+The contract under test:
+
+* every registered strategy accepts every built-in :class:`EdgeOp` in
+  both execution modes, with bit-identical values / iteration counts /
+  edge totals between ``stepped`` and ``fused`` (the schedules never see
+  the semantics, so nothing may drift);
+* ``widest_path`` matches a host max-heap Dijkstra oracle;
+* ``min_label`` CC equals the historical "SSSP over a zero-weight graph
+  copy" hack bit-for-bit (the hack is re-created here as the oracle);
+* ``reach_count`` computes exact path counts on level-layered DAGs
+  (the operator's documented convergence domain).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.algos import (bfs, connected_components, reference_widest,
+                         widest_path)
+from repro.core import engine, operators
+from repro.core.graph import CSRGraph, INF
+from repro.core.operators import EdgeOp
+from repro.core.strategies import (DEFAULT_CAPABILITIES, FRONTIER_INIT,
+                                   STRATEGIES, register,
+                                   strategy_capabilities)
+from repro.data import (erdos_renyi_graph, graph500_graph, rmat_graph,
+                        road_grid_graph)
+
+ALL_STRATEGIES = ["BS", "EP", "WD", "NS", "HP", "AD"]
+#: idempotent monotone built-ins — well-defined on arbitrary graphs
+MONOTONE_OPS = ["shortest_path", "min_label", "widest_path"]
+
+
+def graphs():
+    return {
+        "rmat": rmat_graph(scale=9, edge_factor=8, weighted=True, seed=7),
+        "road": road_grid_graph(side=24, weighted=True, seed=7),
+        "er": erdos_renyi_graph(scale=9, edge_factor=4, weighted=True,
+                                seed=7),
+        "g500": graph500_graph(scale=9, edge_factor=12, weighted=True,
+                               seed=7),
+    }
+
+
+GRAPHS = graphs()
+
+
+def layered_dag(widths=(1, 3, 4, 3, 2), density=0.7, seed=0):
+    """Random DAG whose every edge spans consecutive layers — the
+    single-fire domain where additive propagation is exact."""
+    rng = np.random.default_rng(seed)
+    layers, start = [], 0
+    for w in widths:
+        layers.append(np.arange(start, start + w))
+        start += w
+    src, dst = [], []
+    for a, b in zip(layers[:-1], layers[1:]):
+        for u in a:
+            picks = b[rng.random(len(b)) < density]
+            if len(picks) == 0:
+                picks = b[:1]
+            src.extend([u] * len(picks))
+            dst.extend(picks)
+    n = start
+    wt = rng.integers(1, 10, len(src))
+    return CSRGraph.from_edges(np.array(src), np.array(dst), wt, n)
+
+
+def dag_path_counts(g: CSRGraph, source: int) -> np.ndarray:
+    """Host oracle: #paths source→v by DP in topological (id) order."""
+    row_ptr = np.asarray(g.row_ptr)
+    col = np.asarray(g.col)
+    counts = np.zeros(g.num_nodes, np.int64)
+    counts[source] = 1
+    for u in range(g.num_nodes):        # layered ids are topologically sorted
+        if counts[u]:
+            for e in range(row_ptr[u], row_ptr[u + 1]):
+                counts[col[e]] += counts[u]
+    return counts.astype(np.int32)
+
+
+DAG = layered_dag()
+
+
+# ---------------------------------------------------------------------------
+# fused == stepped for every (operator × strategy) pair
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+@pytest.mark.parametrize("opname", MONOTONE_OPS)
+def test_fused_matches_stepped_all_ops(gname, strategy, opname):
+    g = GRAPHS[gname]
+    stepped = engine.run(g, 0, engine.make_strategy(strategy), op=opname)
+    fused = engine.run(g, 0, engine.make_strategy(strategy), op=opname,
+                       mode="fused")
+    np.testing.assert_array_equal(fused.dist, stepped.dist)
+    assert fused.iterations == stepped.iterations
+    assert fused.edges_relaxed == stepped.edges_relaxed
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_fused_matches_stepped_reach_count_on_dag(strategy):
+    stepped = engine.run(DAG, 0, engine.make_strategy(strategy),
+                         op="reach_count")
+    fused = engine.run(DAG, 0, engine.make_strategy(strategy),
+                       op="reach_count", mode="fused")
+    np.testing.assert_array_equal(fused.dist, stepped.dist)
+    assert fused.iterations == stepped.iterations
+    assert fused.edges_relaxed == stepped.edges_relaxed
+
+
+def test_reach_count_parity_survives_cycles_under_iteration_cap():
+    """On cyclic graphs additive values are undefined but the two modes
+    must still agree bit-for-bit at any iteration cap (int32 wraparound
+    is deterministic; addition commutes across lane orders)."""
+    src = np.array([0, 1, 2, 1])
+    dst = np.array([1, 2, 0, 3])
+    g = CSRGraph.from_edges(src, dst, None, 4)
+    for strategy in ("BS", "WD"):
+        stepped = engine.run(g, 0, engine.make_strategy(strategy),
+                             op="reach_count", max_iterations=9)
+        fused = engine.run(g, 0, engine.make_strategy(strategy),
+                           op="reach_count", mode="fused", max_iterations=9)
+        np.testing.assert_array_equal(fused.dist, stepped.dist)
+        assert fused.iterations == stepped.iterations == 9
+
+
+# ---------------------------------------------------------------------------
+# operator correctness vs host oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_widest_path_matches_host_oracle(gname, strategy):
+    g = GRAPHS[gname]
+    ref = reference_widest(g, 0)
+    res = widest_path(g, 0, strategy=strategy)
+    np.testing.assert_array_equal(res.dist, ref)
+    assert res.dist[0] == INF                       # source unbounded
+
+
+def test_widest_path_unweighted_is_reachability():
+    g = GRAPHS["rmat"]
+    unweighted = CSRGraph(g.row_ptr, g.col, None, g.num_nodes, g.num_edges,
+                          g.max_degree)
+    res = widest_path(unweighted, 0, strategy="WD", mode="fused")
+    levels = bfs(g, 0, strategy="WD").dist
+    np.testing.assert_array_equal(res.dist[1:] > 0, levels[1:] < INF)
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+@pytest.mark.parametrize("mode", ["stepped", "fused"])
+def test_reach_count_matches_dag_oracle(strategy, mode):
+    ref = dag_path_counts(DAG, 0)
+    res = engine.run(DAG, 0, engine.make_strategy(strategy),
+                     op="reach_count", mode=mode)
+    np.testing.assert_array_equal(res.dist, ref)
+
+
+# ---------------------------------------------------------------------------
+# CC: min_label operator ≡ the old zero-weight-graph hack
+# ---------------------------------------------------------------------------
+
+def zero_weight_cc_hack(graph: CSRGraph, strategy: str, mode: str):
+    """The pre-operator construction: shortest_path over a zero-weight
+    copy of the graph, every node seeded with its own id — kept as the
+    oracle that min_label must reproduce bit-for-bit."""
+    g0 = CSRGraph(graph.row_ptr, graph.col,
+                  jnp.zeros((graph.num_edges,), jnp.int32),
+                  graph.num_nodes, graph.num_edges, graph.max_degree)
+
+    def init(n_alloc):
+        return (jnp.arange(n_alloc, dtype=jnp.int32),
+                jnp.ones((n_alloc,), jnp.bool_))
+
+    labels, _, _ = engine.fixed_point(
+        g0, engine.make_strategy(strategy), init, op="shortest_path",
+        mode=mode)
+    return labels
+
+
+@pytest.mark.parametrize("strategy", ["BS", "WD", "NS", "HP", "AD"])
+@pytest.mark.parametrize("mode", ["stepped", "fused"])
+def test_cc_min_label_equals_zero_weight_hack(strategy, mode):
+    g = GRAPHS["rmat"]
+    new = connected_components(g, strategy=strategy, mode=mode)
+    old = zero_weight_cc_hack(g, strategy, mode)
+    np.testing.assert_array_equal(new, old)
+
+
+def test_cc_builds_no_graph_copy():
+    """min_label runs on the caller's graph object — no zero-weight
+    duplicate of col/wt is allocated anymore."""
+    calls = []
+    g = GRAPHS["road"]
+
+    class Spy(type(engine.make_strategy("WD"))):
+        def setup(self, graph):
+            calls.append(graph)
+            return super().setup(graph)
+
+    strat = Spy()
+    labels, _, _ = engine.fixed_point(
+        g, strat,
+        lambda n: (jnp.arange(n, dtype=jnp.int32),
+                   jnp.ones((n,), jnp.bool_)),
+        op=operators.min_label)
+    assert calls[0] is g          # same object, not a rebuilt copy
+
+
+# ---------------------------------------------------------------------------
+# capability flags on the registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_capability_declarations():
+    for name in ("BS", "WD", "NS", "HP", "AD"):
+        assert FRONTIER_INIT in strategy_capabilities(name)
+    assert FRONTIER_INIT not in strategy_capabilities("EP")
+
+
+def test_cc_rejects_strategy_without_frontier_init():
+    g = GRAPHS["road"]
+    with pytest.raises(ValueError, match="node strategy"):
+        connected_components(g, strategy="EP")
+
+
+def test_third_party_strategy_capability_composition():
+    """A registered third-party strategy with FRONTIER_INIT passes the
+    capability gate (no isinstance checks anywhere in the algos)."""
+    @register(name="_CAPTEST")
+    class _CapTest(STRATEGIES["WD"]):
+        name = "_CAPTEST"
+
+    @register(name="_NOCAP", capabilities=frozenset())
+    class _NoCap(STRATEGIES["WD"]):
+        name = "_NOCAP"
+
+    @register(name="_EPSUB")
+    class _EpSub(STRATEGIES["EP"]):
+        # a tuned EP variant: restricted capabilities must be INHERITED,
+        # not silently reset to the permissive default
+        name = "_EPSUB"
+
+    try:
+        assert strategy_capabilities("_CAPTEST") == DEFAULT_CAPABILITIES
+        assert strategy_capabilities("_NOCAP") == frozenset()
+        assert FRONTIER_INIT not in strategy_capabilities("_EPSUB")
+        g = GRAPHS["road"]
+        ref = connected_components(g, strategy="WD")
+        got = connected_components(g, strategy="_CAPTEST")
+        np.testing.assert_array_equal(got, ref)
+        with pytest.raises(ValueError, match="node strategy"):
+            connected_components(g, strategy="_NOCAP")
+    finally:
+        del STRATEGIES["_CAPTEST"], STRATEGIES["_NOCAP"], STRATEGIES["_EPSUB"]
+
+
+# ---------------------------------------------------------------------------
+# the EdgeOp contract itself
+# ---------------------------------------------------------------------------
+
+def test_operator_registry_resolve():
+    assert operators.resolve("widest_path") is operators.widest_path
+    assert operators.resolve(operators.min_label) is operators.min_label
+    with pytest.raises(KeyError, match="unknown operator"):
+        operators.resolve("nope")
+
+
+def test_operator_registry_register():
+    longest = EdgeOp(name="_test_longest", combine="max", identity=-INF,
+                     source_value=0, message=operators._sum_message)
+    operators.register_operator(longest)
+    try:
+        assert operators.resolve("_test_longest") is longest
+        with pytest.raises(ValueError, match="already registered"):
+            operators.register_operator(longest)
+    finally:
+        del operators.OPERATORS["_test_longest"]
+    with pytest.raises(TypeError):
+        operators.register_operator(object())
+
+
+def test_operator_rejects_bad_combine():
+    with pytest.raises(ValueError, match="combine"):
+        EdgeOp(name="bad", combine="xor", identity=0, source_value=0,
+               message=operators._copy_message)
+
+
+def test_custom_operator_runs_through_engine():
+    """A user-defined operator (longest path on a DAG via max-plus)
+    flows through stepped and fused engines without new kernel code."""
+    longest = EdgeOp(name="_longest_dag", combine="max", identity=-1,
+                     source_value=0, message=operators._sum_message)
+    stepped = engine.run(DAG, 0, engine.make_strategy("WD"), op=longest)
+    fused = engine.run(DAG, 0, engine.make_strategy("WD"), op=longest,
+                       mode="fused")
+    np.testing.assert_array_equal(fused.dist, stepped.dist)
+    # oracle: DP over topologically-sorted ids
+    row_ptr = np.asarray(DAG.row_ptr)
+    col = np.asarray(DAG.col)
+    wt = np.asarray(DAG.wt)
+    ref = np.full(DAG.num_nodes, -1, np.int64)
+    ref[0] = 0
+    for u in range(DAG.num_nodes):
+        if ref[u] >= 0:
+            for e in range(row_ptr[u], row_ptr[u + 1]):
+                ref[col[e]] = max(ref[col[e]], ref[u] + wt[e])
+    np.testing.assert_array_equal(stepped.dist, ref)
+
+
+def test_engine_ready_is_public():
+    x = engine.ready(jnp.arange(4))
+    np.testing.assert_array_equal(np.asarray(x), [0, 1, 2, 3])
+    assert engine._ready is engine.ready      # compat alias
+
+
+def test_fixed_point_mode_validation():
+    g = GRAPHS["road"]
+    with pytest.raises(ValueError, match="mode"):
+        engine.fixed_point(g, engine.make_strategy("WD"),
+                           lambda n: (None, None), mode="warp")
