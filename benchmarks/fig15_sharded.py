@@ -1,0 +1,122 @@
+"""Fig. 15 (extension): sharded fixed-point engine — MTEPS and
+communication share vs shard count (docs/sharding.md).
+
+The paper rules edge-based balancing out for large graphs on memory
+grounds (§I); the production answer is to partition the graph across
+devices.  This module measures the sharded fused engine
+(``engine.run(..., mode="fused", shards=S)``) on the rmat (power-law)
+and road (bounded-degree) families over S ∈ {1, 2, 4, 8} and reports:
+
+* measured MTEPS per shard count (``RunResult.mteps`` — the edge total
+  counts each relaxed edge exactly once across shards);
+* the partition's **edge-cut share** (``ShardInfo.cut_share``): the
+  fraction of relax traffic that crosses a shard boundary, i.e. the
+  communication a sparse ghost exchange would pay — rmat's permuted
+  power-law edges cut heavily, road's grid locality cuts lightly,
+  reproducing the classic partitioning contrast;
+* the per-combine halo volume (``ShardInfo.halo_bytes``) and the dense
+  replica-exchange volume the current combine actually moves
+  (``S · N · 4`` bytes), so the sparse-vs-dense exchange gap is visible
+  in the table;
+* a parity assertion: every sharded run must be bit-identical (dist,
+  iterations, edges) to the single-device fused run.
+
+Honesty note: the shards here are *virtual* host devices carved out of
+one CPU (``XLA_FLAGS=--xla_force_host_platform_device_count=8``), so
+MTEPS vs S shows the *overhead* trend (combine cost, padding) rather
+than real multi-device speedup — the same caveat as every CPU-scaled
+figure in this suite (benchmarks/common.py).  The measurement runs in a
+subprocess because the device-count flag must be set before jax
+initializes; the parent stays single-device.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import csv_line, save_result
+
+SHARD_COUNTS = [1, 2, 4, 8]
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import json
+import numpy as np
+from repro.core import engine, shard
+from repro.data import rmat_graph, road_grid_graph
+
+SHARD_COUNTS = %s
+GRAPHS = {
+    "rmat": lambda: rmat_graph(scale=10, edge_factor=8, weighted=True,
+                               seed=7),
+    "road": lambda: road_grid_graph(side=48, weighted=True, seed=7),
+}
+
+rows = []
+for gname, make in GRAPHS.items():
+    g = make()
+    source = int(np.argmax(np.asarray(g.degrees)))
+    base = None
+    for s_count in SHARD_COUNTS:
+        _, info = shard.partition(g, s_count, method="degree")
+        best = None
+        for i in range(3):                     # warm-up + best-of-2
+            res = engine.run(g, source, engine.make_strategy("WD"),
+                             mode="fused", shards=s_count)
+            if i and (best is None
+                      or res.traversal_seconds < best.traversal_seconds):
+                best = res
+        if base is None:
+            base = best
+        assert np.array_equal(best.dist, base.dist), f"{gname}/{s_count}"
+        assert best.iterations == base.iterations
+        assert best.edges_relaxed == base.edges_relaxed
+        rows.append({
+            "graph": gname, "shards": s_count,
+            "iterations": best.iterations,
+            "edges_relaxed": best.edges_relaxed,
+            "traversal_s": best.traversal_seconds,
+            "setup_s": best.setup_seconds,
+            "mteps": best.mteps,
+            "cut_share": info.cut_share,
+            "halo_bytes": info.halo_bytes,
+            "replica_exchange_bytes": 4 * g.num_nodes * s_count,
+            "edge_imbalance": info.edge_imbalance,
+        })
+print(json.dumps({"rows": rows}))
+""" % SHARD_COUNTS
+
+
+def run(verbose: bool = True):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src"
+    root = os.path.join(os.path.dirname(__file__), "..")
+    out = subprocess.run([sys.executable, "-c", _CHILD], cwd=root, env=env,
+                         capture_output=True, text=True, timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f"fig15 child failed:\n{out.stderr[-3000:]}")
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    save_result("fig15_sharded", payload)
+    lines = []
+    for r in payload["rows"]:
+        derived = (f"mteps={r['mteps']:.2f};"
+                   f"cut_share={r['cut_share']:.3f};"
+                   f"halo_kb={r['halo_bytes'] / 1024:.1f};"
+                   f"edge_imbalance={r['edge_imbalance']:.2f}")
+        lines.append(csv_line(
+            f"fig15_sharded/{r['graph']}/shards{r['shards']}",
+            r["traversal_s"] * 1e6, derived))
+    if verbose:
+        print("\n".join(lines))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -35,6 +35,7 @@ from repro.core.engine import fixed_point, make_strategy
 def connected_components(graph, strategy: str = "WD",
                          max_iterations: int = 10000,
                          mode: str = "stepped",
+                         shards=None, partition: str = "degree",
                          **strategy_kwargs) -> np.ndarray:
     """Returns the min-node-id label of each node's (in-)component."""
     strat = make_strategy(strategy, **strategy_kwargs)
@@ -50,5 +51,6 @@ def connected_components(graph, strategy: str = "WD",
 
     labels, _, _ = fixed_point(
         graph, strat, every_node_its_own_label, op=operators.min_label,
-        mode=mode, max_iterations=max_iterations)
+        mode=mode, max_iterations=max_iterations, shards=shards,
+        partition=partition)
     return labels

@@ -14,17 +14,21 @@ from repro.core.multi_source import BatchRunResult
 
 def sssp(graph: CSRGraph, source: int = 0, strategy: str = "WD",
          record_degrees: bool = False, mode: str = "stepped",
+         shards=None, partition: str = "degree",
          **strategy_kwargs) -> RunResult:
     """``mode="fused"`` runs the traversal as one device dispatch (see
-    :mod:`repro.core.fused`); ``"stepped"`` keeps per-iteration stats."""
+    :mod:`repro.core.fused`); ``"stepped"`` keeps per-iteration stats;
+    ``shards=S`` partitions the graph over S devices (fused mode,
+    SHARDABLE strategies — docs/sharding.md)."""
     assert graph.wt is not None, "SSSP needs a weighted graph"
     strat = make_strategy(strategy, **strategy_kwargs)
     return run(graph, source, strat, record_degrees=record_degrees,
-               mode=mode)
+               mode=mode, shards=shards, partition=partition)
 
 
-def sssp_batch(graph: CSRGraph, sources,
-               mode: str = "stepped") -> BatchRunResult:
+def sssp_batch(graph: CSRGraph, sources, mode: str = "stepped",
+               shards=None, partition: str = "degree") -> BatchRunResult:
     """Shortest paths from K sources concurrently (dist is ``[K, N]``)."""
     assert graph.wt is not None, "SSSP needs a weighted graph"
-    return run_batch(graph, sources, mode=mode)
+    return run_batch(graph, sources, mode=mode, shards=shards,
+                     partition=partition)

@@ -26,6 +26,7 @@ from repro.core.graph import CSRGraph, INF
 
 def widest_path(graph: CSRGraph, source: int = 0, strategy: str = "WD",
                 record_degrees: bool = False, mode: str = "stepped",
+                shards=None, partition: str = "degree",
                 **strategy_kwargs) -> RunResult:
     """Max-min bottleneck width from ``source`` to every node.
 
@@ -34,7 +35,8 @@ def widest_path(graph: CSRGraph, source: int = 0, strategy: str = "WD",
     the traversal as one device dispatch (see :mod:`repro.core.fused`)."""
     strat = make_strategy(strategy, **strategy_kwargs)
     return run(graph, source, strat, op="widest_path",
-               record_degrees=record_degrees, mode=mode)
+               record_degrees=record_degrees, mode=mode, shards=shards,
+               partition=partition)
 
 
 def reference_widest(graph: CSRGraph, source: int) -> np.ndarray:

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.graph import CSRGraph, INF
 
 
@@ -123,7 +124,7 @@ def distributed_sssp(g: CSRGraph, source: int, mesh: Mesh,
         count = jax.lax.psum(jnp.sum(new_mask, dtype=jnp.int32), axis)
         return (new_dist[None], new_mask[None], count[None])
 
-    sharded = jax.jit(jax.shard_map(
+    sharded = jax.jit(shard_map(
         iteration, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=(P(axis), P(axis), P(axis))))

@@ -34,10 +34,12 @@ import numpy as np
 
 from repro.core import fused as _fused
 from repro.core import operators
+from repro.core import shard as _shard
 from repro.core.graph import CSRGraph, INF
 from repro.core.strategies import (
-    EdgeBased, FRONTIER_INIT, IterStats, NodeSplitting, StrategyBase,
-    STRATEGIES, make_strategy, register, strategy_capabilities)
+    EdgeBased, FRONTIER_INIT, IterStats, NodeSplitting, SHARDABLE,
+    StrategyBase, STRATEGIES, make_strategy, register,
+    strategy_capabilities)
 
 
 @dataclasses.dataclass
@@ -53,6 +55,12 @@ class RunResult:
     strategy: str
     state_bytes: int                 # device bytes held by the strategy
     mode: str = "stepped"            # "stepped" or "fused"
+    #: shard count of the run (1 = single-device).  ``edges_relaxed``
+    #: counts each relaxed edge exactly once ACROSS shards (every shard
+    #: sums only the masked degrees of nodes it owns and the totals are
+    #: psum-folded once), so :attr:`mteps` needs no per-shard correction
+    #: and stays directly comparable to single-device figures.
+    shards: int = 1
 
     @property
     def traversal_seconds(self) -> float:
@@ -92,9 +100,29 @@ def ready(x):
 _ready = ready    # backwards-compat alias (pre-operator-API imports)
 
 
+def _check_sharding(strategy: StrategyBase, mode: str,
+                    shards: Optional[int]) -> None:
+    """Validate a ``shards=`` request (shared by run/fixed_point)."""
+    if shards is None:
+        return
+    if mode != "fused":
+        raise ValueError(
+            "sharded execution runs the whole traversal on-device under "
+            "shard_map, i.e. the fused engine; pass mode='fused' "
+            "(docs/sharding.md)")
+    if SHARDABLE not in strategy.capabilities:
+        raise ValueError(
+            f"strategy {strategy.name!r} does not declare the "
+            f"{SHARDABLE!r} capability; sharding is gated on BS/WD/HP/NS "
+            f"(EP's COO worklist and AD's global frontier statistics "
+            f"stay single-device — docs/sharding.md)")
+
+
 def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         max_iterations: int = 100000, record_degrees: bool = False,
-        mode: str = "stepped", op="shortest_path") -> RunResult:
+        mode: str = "stepped", op="shortest_path",
+        shards: Optional[int] = None,
+        partition: str = "degree") -> RunResult:
     """Fixed-point driver.  With the default ``shortest_path`` operator,
     ``graph.wt is None`` ⇒ BFS levels, else SSSP distances; any other
     :class:`repro.core.operators.EdgeOp` (or registered name) swaps the
@@ -105,7 +133,16 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
     traversal as one on-device ``while_loop`` dispatch (same values,
     iteration count and edge total — see :mod:`repro.core.fused`).
     ``record_degrees`` needs the host in the loop, so it requires stepped
-    mode."""
+    mode.
+
+    ``shards=S`` (fused mode, :data:`repro.core.strategies.SHARDABLE`
+    strategies only) partitions the graph over S devices and runs the
+    fused kernels per-shard under ``shard_map``, combining ghost values
+    with the operator's monoid at every chunk boundary — bit-identical
+    dist/iterations/edges to the single-device paths
+    (:mod:`repro.core.shard`; ``partition`` picks the node split:
+    ``"degree"`` balances edges per shard, ``"contiguous"`` node
+    counts)."""
     if mode not in ("stepped", "fused"):
         raise ValueError(
             f"mode must be 'stepped' or 'fused', got {mode!r}")
@@ -113,6 +150,7 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         raise ValueError(
             "record_degrees collects per-iteration host-side stats; "
             "use mode='stepped'")
+    _check_sharding(strategy, mode, shards)
     op = operators.resolve(op)
     if graph.num_edges == 0:        # degenerate: nothing to relax
         dist = np.full(graph.num_nodes, op.identity,
@@ -122,9 +160,15 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
                          setup_seconds=0.0, kernel_seconds=0.0,
                          overhead_seconds=0.0, edges_relaxed=0,
                          iter_stats=[], strategy=strategy.name,
-                         state_bytes=0, mode=mode)
+                         state_bytes=0, mode=mode, shards=shards or 1)
     t0 = time.perf_counter()
     state = strategy.setup(graph)
+    splan = None
+    if shards is not None:
+        # partitioning is one-off host preprocessing, booked as setup
+        # like the NS morph / EP COO conversion
+        splan = _shard.plan_shards(strategy, state, graph, shards,
+                                   method=partition)
     _ready(jax.tree_util.tree_leaves(state))
     setup_s = time.perf_counter() - t0
 
@@ -139,12 +183,19 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
     if mode == "fused":
         mask = jnp.zeros((n_alloc,), jnp.bool_).at[source].set(True)
         t_start = time.perf_counter()
-        dist, iterations, edges = _fused.run_fixed_point(
-            graph, state, strategy, dist, mask, op=op,
-            max_iterations=max_iterations)
+        if splan is not None:
+            dist, iterations, edges = _shard.run_fixed_point(
+                splan, dist, mask, op=op, max_iterations=max_iterations)
+        else:
+            dist, iterations, edges = _fused.run_fixed_point(
+                graph, state, strategy, dist, mask, op=op,
+                max_iterations=max_iterations)
         total_s = time.perf_counter() - t_start
         if isinstance(strategy, NodeSplitting):
             dist = strategy.split_info.extract_original(dist)
+        state_bytes = strategy.state_bytes(state)
+        if splan is not None:
+            state_bytes += splan.sharded.device_bytes()
         # one dispatch: the kernel/overhead split collapses — the whole
         # traversal is kernel time, setup is the only host-side overhead
         return RunResult(
@@ -152,7 +203,7 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
             total_seconds=total_s + setup_s, setup_seconds=setup_s,
             kernel_seconds=total_s, overhead_seconds=setup_s,
             edges_relaxed=edges, iter_stats=[], strategy=strategy.name,
-            state_bytes=strategy.state_bytes(state), mode="fused")
+            state_bytes=state_bytes, mode="fused", shards=shards or 1)
 
     iter_stats: list[IterStats] = []
     kernel_s = 0.0
@@ -204,7 +255,9 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
 
 def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
                 op="shortest_path", mode: str = "stepped",
-                max_iterations: int = 100000):
+                max_iterations: int = 100000,
+                shards: Optional[int] = None,
+                partition: str = "degree"):
     """Run a strategy to its fixed point from a caller-supplied seeding.
 
     The escape hatch under :func:`run` for algorithms whose initial state
@@ -217,8 +270,11 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
 
     Requires a strategy with the :data:`repro.core.strategies.FRONTIER_INIT`
     capability (EP's edge worklist cannot represent an arbitrary dense
-    frontier).  Returns ``(values, iterations, edges_relaxed)`` with
-    ``values`` a host array on the *original* node allocation."""
+    frontier).  ``shards=S`` runs the fused kernels per-shard under
+    ``shard_map`` (fused mode + SHARDABLE strategies only — see
+    :func:`run` and docs/sharding.md).  Returns ``(values, iterations,
+    edges_relaxed)`` with ``values`` a host array on the *original* node
+    allocation."""
     if mode not in ("stepped", "fused"):
         raise ValueError(
             f"mode must be 'stepped' or 'fused', got {mode!r}")
@@ -227,6 +283,7 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
             f"strategy {strategy.name!r} does not declare the "
             f"{FRONTIER_INIT!r} capability; seeding an arbitrary frontier "
             f"needs a node strategy")
+    _check_sharding(strategy, mode, shards)
     op = operators.resolve(op)
     state = strategy.setup(graph)
     if isinstance(strategy, NodeSplitting):
@@ -235,7 +292,12 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
         n_alloc = graph.num_nodes
     dist, mask = init(n_alloc)
 
-    if mode == "fused":
+    if shards is not None:
+        splan = _shard.plan_shards(strategy, state, graph, shards,
+                                   method=partition)
+        dist, it, edges = _shard.run_fixed_point(
+            splan, dist, mask, op=op, max_iterations=max_iterations)
+    elif mode == "fused":
         dist, it, edges = _fused.run_fixed_point(
             graph, state, strategy, dist, mask, op=op,
             max_iterations=max_iterations)
@@ -254,15 +316,18 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
 
 
 def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
-              mode: str = "stepped", op="shortest_path"):
+              mode: str = "stepped", op="shortest_path",
+              shards: Optional[int] = None, partition: str = "degree"):
     """Run K sources concurrently against one graph (dist is ``[K, N]``).
 
     Thin wrapper over :func:`repro.core.multi_source.run_batch`; kept here
-    so single-source and batched entry points live side by side."""
+    so single-source and batched entry points live side by side.
+    ``shards=S`` (fused mode only) shards the graph over S devices and
+    vmaps the sharded WD step over the source axis (docs/sharding.md)."""
     from repro.core import multi_source
     return multi_source.run_batch(graph, sources,
                                   max_iterations=max_iterations, mode=mode,
-                                  op=op)
+                                  op=op, shards=shards, partition=partition)
 
 
 def reference_distances(graph: CSRGraph, source: int) -> np.ndarray:

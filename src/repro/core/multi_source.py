@@ -45,6 +45,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +68,9 @@ class BatchRunResult:
     iter_stats: list
     strategy: str = "WD-batch"
     mode: str = "stepped"            # "stepped" or "fused"
+    #: shard count (1 = single-device); ``edges_relaxed`` counts each
+    #: relaxed edge exactly once across shards (see docs/sharding.md)
+    shards: int = 1
 
     @property
     def mteps(self) -> float:
@@ -125,7 +129,9 @@ def refill_slot(dist_b, mask_b, slot: jax.Array, source: jax.Array,
 
 
 def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
-              mode: str = "stepped", op="shortest_path") -> BatchRunResult:
+              mode: str = "stepped", op="shortest_path",
+              shards: Optional[int] = None,
+              partition: str = "degree") -> BatchRunResult:
     """Fixed-point driver over K sources at once.
 
     Semantics match K independent ``engine.run`` calls exactly (same
@@ -134,11 +140,19 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
     levels, else SSSP distances; pass any
     :class:`repro.core.operators.EdgeOp` (or registered name) as ``op``
     for other semantics.  ``mode="fused"`` runs the whole batch in one
-    device dispatch (see module docstring).
+    device dispatch (see module docstring); ``shards=S`` additionally
+    partitions the graph over S devices and vmaps the *sharded* WD step
+    over the source axis — bit-identical dist/iterations/edges to the
+    single-device batch (:mod:`repro.core.shard`, docs/sharding.md).
     """
     if mode not in ("stepped", "fused"):
         raise ValueError(
             f"mode must be 'stepped' or 'fused', got {mode!r}")
+    if shards is not None and mode != "fused":
+        raise ValueError(
+            "sharded batches run the whole fixed point on-device under "
+            "shard_map, i.e. the fused engine; pass mode='fused' "
+            "(docs/sharding.md)")
     op = operators.resolve(op)
     np_dtype = np.dtype(op.dtype)
     sources = np.asarray(sources, np.int32)
@@ -148,16 +162,29 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
         return BatchRunResult(dist=np.zeros((0, n), np_dtype),
                               sources=sources, iterations=0,
                               total_seconds=0.0, edges_relaxed=0,
-                              iter_stats=[], mode=mode)
+                              iter_stats=[], mode=mode, shards=shards or 1)
     if graph.num_edges == 0:
         dist = np.full((k, n), op.identity, np_dtype)
         dist[np.arange(k), sources] = op.seed(sources)
         return BatchRunResult(dist=dist, sources=sources, iterations=0,
                               total_seconds=0.0, edges_relaxed=0,
-                              iter_stats=[], mode=mode)
+                              iter_stats=[], mode=mode, shards=shards or 1)
 
     t0 = time.perf_counter()
     dist_b, mask_b = init_batch(n, jnp.asarray(sources), op=op)
+
+    if shards is not None:
+        from repro.core import shard
+        sharded, _info = shard.partition(graph, shards, method=partition)
+        mesh = shard.shard_mesh(shards)
+        dist_b, iterations, edges = shard.run_batch_fixed_point(
+            sharded, dist_b, mask_b, mesh=mesh, op=op,
+            max_iterations=max_iterations)
+        total_s = time.perf_counter() - t0
+        return BatchRunResult(dist=np.asarray(dist_b), sources=sources,
+                              iterations=iterations, total_seconds=total_s,
+                              edges_relaxed=edges, iter_stats=[],
+                              mode="fused", shards=shards)
 
     if mode == "fused":
         from repro.core import fused

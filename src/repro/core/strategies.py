@@ -299,9 +299,21 @@ class IterStats:
 #: EP does not (its state is an edge worklist derived from one source).
 FRONTIER_INIT = "frontier_init"
 
+#: capability: the strategy's fused kernel has a multi-device lowering in
+#: :mod:`repro.core.shard` (``engine.run(..., shards=)``).  BS/WD/HP/NS
+#: declare it; EP does not (its COO edge worklist is device-local) and
+#: AD does not (its per-iteration kernel choice consumes global frontier
+#: statistics) — see docs/sharding.md.
+SHARDABLE = "shardable"
+
 #: capabilities a plain StrategyBase subclass declares unless it says
-#: otherwise at registration (or via a ``capabilities`` class attribute)
+#: otherwise at registration (or via a ``capabilities`` class attribute).
+#: Deliberately excludes :data:`SHARDABLE`: a third-party strategy is
+#: single-device until it ships a sharded lowering and says so.
 DEFAULT_CAPABILITIES = frozenset({FRONTIER_INIT})
+
+#: what the four built-in shardable strategies declare
+SHARDED_CAPABILITIES = frozenset({FRONTIER_INIT, SHARDABLE})
 
 
 class StrategyBase:
@@ -393,6 +405,7 @@ def strategy_capabilities(name: str) -> frozenset:
 @register
 class NodeBased(StrategyBase):
     name = "BS"
+    capabilities = SHARDED_CAPABILITIES
 
     def iterate(self, g, dist, updated_mask, count, *,
                 op: EdgeOp = operators.shortest_path, record_degrees=False):
@@ -474,6 +487,7 @@ class EdgeBased(StrategyBase):
 @register
 class WorkloadDecomposition(StrategyBase):
     name = "WD"
+    capabilities = SHARDED_CAPABILITIES
 
     def __init__(self, use_pallas: bool = False):
         self.use_pallas = use_pallas
@@ -504,6 +518,7 @@ class WorkloadDecomposition(StrategyBase):
 @register
 class NodeSplitting(StrategyBase):
     name = "NS"
+    capabilities = SHARDED_CAPABILITIES
 
     def __init__(self, histogram_bins: int = 10, mdt: Optional[int] = None):
         self.histogram_bins = histogram_bins
@@ -535,6 +550,7 @@ class NodeSplitting(StrategyBase):
 @register
 class HierarchicalProcessing(StrategyBase):
     name = "HP"
+    capabilities = SHARDED_CAPABILITIES
 
     def __init__(self, histogram_bins: int = 10, mdt: Optional[int] = None,
                  switch_threshold: int = 1024):

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.moe.balancing import _expert_ffn, _positions
 
 
@@ -123,7 +124,7 @@ def ep_global_dispatch(x, ids, weights, expert_params, *, mesh: Mesh,
         b_loc = xs.shape[0]
         return jax.lax.dynamic_slice_in_dim(y, rank * b_loc, b_loc, axis=0)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(dp), P(dp), P(dp), P(("data", "model"))),
         out_specs=P(dp),
@@ -210,12 +211,13 @@ def sharded_moe_dispatch(x, ids, weights, expert_params, *, mesh: Mesh,
         y = y.reshape(B, S, K, D).sum(2)
         return jax.lax.psum(y, tp)
 
-    y = jax.shard_map(
+    y = shard_map(
         body, mesh=mesh,
         in_specs=(tok_spec, tok_spec, tok_spec, w_specs),
         out_specs=tok_spec,
         # replicated-token fallback: output equality across data ranks
-        # holds by construction (identical inputs), not provable to VMA
-        check_vma=(tok_spec != P()),
+        # holds by construction (identical inputs), not provable to the
+        # replication checker
+        check=(tok_spec != P()),
     )(x, ids, weights, expert_params)
     return y

@@ -1,0 +1,298 @@
+"""Differential parity fuzz harness (the PR's test centerpiece).
+
+Every layer added since the seed multiplies the parity surface:
+(operator × strategy × execution mode × shard count) must all agree with
+each other **and** with a trivially-correct host oracle.  This module
+keeps that matrix honest three ways:
+
+* a **host oracle**: a numpy Jacobi sweep that relaxes every edge until
+  nothing changes.  For the idempotent monotone built-ins
+  (``shortest_path`` / ``min_label`` / ``widest_path``) any relax order
+  reaches the unique fixed point, so the oracle pins down *values*
+  independent of every scheduling decision the engine makes;
+* a **deterministic fuzz matrix**: seeded random graphs (fixed shapes,
+  so jit specializations are shared across cases) × every strategy ×
+  every monotone operator, asserting ``stepped == fused == oracle``
+  bit-for-bit, plus the sharded leg at whatever device count is visible
+  (1 under plain tier-1; 8 under the CI sharded job — the suite adapts
+  rather than skips);
+* an optional **hypothesis layer** (skipped when hypothesis isn't
+  installed, like tests/test_strategies_property.py) that searches edge
+  lists adversarially instead of sampling them.
+
+Satellite coverage that belongs to the same contract rides along:
+``engine.fixed_point`` custom seeding (multi-source init, non-zero
+seeds, the ``max_iterations`` cap) and ``strategy_capabilities`` on
+unregistered names.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine, operators
+from repro.core.graph import CSRGraph, INF
+from repro.core.strategies import strategy_capabilities
+from repro.data import road_grid_graph
+
+ALL_STRATEGIES = ["BS", "EP", "WD", "NS", "HP", "AD"]
+SHARDED_STRATEGIES = ["BS", "WD", "HP", "NS"]
+MONOTONE_OPS = ["shortest_path", "min_label", "widest_path"]
+
+#: shard width the in-process sharded leg can actually run at.  Plain
+#: tier-1 sees one device (shards=1 still exercises the full shard_map
+#: machinery); the CI sharded job forces 8 host devices, so the same
+#: tests run at real multi-device width there.
+N_SHARDS = min(len(jax.devices()), 4)
+
+
+# ---------------------------------------------------------------------------
+# host oracle: order-independent Jacobi relaxation to the fixed point
+# ---------------------------------------------------------------------------
+
+def host_fixed_point(graph: CSRGraph, init_vals: np.ndarray,
+                     op_name: str) -> np.ndarray:
+    """Relax every edge from the current values until a full sweep
+    changes nothing — int64 host arithmetic, no frontier bookkeeping,
+    no scheduling.  Exact for the idempotent monotone operators."""
+    rp = np.asarray(graph.row_ptr, np.int64)
+    col = np.asarray(graph.col, np.int64)
+    wt = (np.ones(graph.num_edges, np.int64) if graph.wt is None
+          else np.asarray(graph.wt, np.int64))
+    src = np.repeat(np.arange(graph.num_nodes, dtype=np.int64),
+                    np.diff(rp))
+    vals = np.asarray(init_vals, np.int64).copy()
+    for _ in range(graph.num_nodes + 1):
+        sv = vals[src]
+        if op_name == "shortest_path":
+            new = vals.copy()
+            np.minimum.at(new, col, sv + wt)
+        elif op_name == "min_label":
+            new = vals.copy()
+            np.minimum.at(new, col, sv)
+        elif op_name == "widest_path":
+            new = vals.copy()
+            np.maximum.at(new, col, np.minimum(sv, wt))
+        else:
+            raise ValueError(op_name)
+        if np.array_equal(new, vals):
+            return vals
+        vals = new
+    raise AssertionError("host oracle failed to converge")
+
+
+def single_source_init(op: operators.EdgeOp, n: int, source: int
+                       ) -> np.ndarray:
+    vals = np.full(n, op.identity, np.int64)
+    vals[source] = op.seed(source)
+    return vals
+
+
+# ---------------------------------------------------------------------------
+# deterministic fuzz matrix
+# ---------------------------------------------------------------------------
+
+_N, _M = 48, 192          # fixed shapes: cases share jit specializations
+
+
+def fuzz_graph(seed: int) -> CSRGraph:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, _N, _M)
+    dst = rng.integers(0, _N, _M)
+    wt = rng.integers(1, 101, _M).astype(np.int32)
+    return CSRGraph.from_edges(src, dst, wt, _N)
+
+
+GRAPHS = [fuzz_graph(seed) for seed in (11, 22, 33, 44)]
+_PICK = random.Random(0)
+#: (strategy, op) -> (graph index, source), drawn once, stable across runs
+CASES = [(s, op, _PICK.randrange(len(GRAPHS)), _PICK.randrange(_N))
+         for s in ALL_STRATEGIES for op in MONOTONE_OPS]
+
+
+@pytest.mark.parametrize("strategy,op,gi,source", CASES)
+def test_differential_stepped_fused_oracle(strategy, op, gi, source):
+    g = GRAPHS[gi]
+    opr = operators.resolve(op)
+    ref = host_fixed_point(g, single_source_init(opr, _N, source), op)
+    stepped = engine.run(g, source, engine.make_strategy(strategy), op=op)
+    fused = engine.run(g, source, engine.make_strategy(strategy), op=op,
+                       mode="fused")
+    np.testing.assert_array_equal(stepped.dist.astype(np.int64), ref,
+                                  err_msg=f"{strategy}/{op}: vs oracle")
+    np.testing.assert_array_equal(fused.dist, stepped.dist)
+    assert fused.iterations == stepped.iterations
+    assert fused.edges_relaxed == stepped.edges_relaxed
+
+
+@pytest.mark.parametrize("strategy,op,gi,source",
+                         [c for c in CASES if c[0] in SHARDED_STRATEGIES])
+def test_differential_sharded(strategy, op, gi, source):
+    """The sharded leg of the same matrix, at the visible device width."""
+    g = GRAPHS[gi]
+    single = engine.run(g, source, engine.make_strategy(strategy), op=op,
+                        mode="fused")
+    sharded = engine.run(g, source, engine.make_strategy(strategy), op=op,
+                         mode="fused", shards=N_SHARDS)
+    np.testing.assert_array_equal(sharded.dist, single.dist,
+                                  err_msg=f"{strategy}/{op}: sharded dist")
+    assert sharded.iterations == single.iterations
+    assert sharded.edges_relaxed == single.edges_relaxed
+    assert sharded.shards == N_SHARDS
+
+
+def test_differential_all_active_seeding():
+    """CC-style every-node-active seeding: engine.fixed_point equals the
+    oracle run from the same initial values, for every node strategy."""
+    g = GRAPHS[0]
+    ref = host_fixed_point(g, np.arange(_N, dtype=np.int64), "min_label")
+    for strategy in ("BS", "WD", "NS", "HP", "AD"):
+        for mode in ("stepped", "fused"):
+            labels, _, _ = engine.fixed_point(
+                g, engine.make_strategy(strategy),
+                lambda n: (jnp.arange(n, dtype=jnp.int32),
+                           jnp.ones((n,), jnp.bool_)),
+                op=operators.min_label, mode=mode)
+            np.testing.assert_array_equal(
+                labels.astype(np.int64), ref,
+                err_msg=f"{strategy}/{mode}: all-active min_label")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis layer (adversarial search; optional like the property suite —
+# a guarded import rather than importorskip so the deterministic matrix
+# above still runs where hypothesis isn't installed)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _HN, _HM = 16, 40         # fixed shapes again
+
+    @st.composite
+    def edge_lists(draw):
+        src = draw(st.lists(st.integers(0, _HN - 1), min_size=_HM,
+                            max_size=_HM))
+        dst = draw(st.lists(st.integers(0, _HN - 1), min_size=_HM,
+                            max_size=_HM))
+        wt = draw(st.lists(st.integers(1, 7), min_size=_HM, max_size=_HM))
+        source = draw(st.integers(0, _HN - 1))
+        return np.array(src), np.array(dst), np.array(wt, np.int32), source
+
+    @settings(max_examples=25, deadline=None)
+    @given(case=edge_lists(), op=st.sampled_from(MONOTONE_OPS),
+           strategy=st.sampled_from(["BS", "WD", "EP", "AD"]))
+    def test_hypothesis_differential(case, op, strategy):
+        src, dst, wt, source = case
+        g = CSRGraph.from_edges(src, dst, wt, _HN)
+        opr = operators.resolve(op)
+        ref = host_fixed_point(g, single_source_init(opr, _HN, source), op)
+        stepped = engine.run(g, source, engine.make_strategy(strategy),
+                             op=op)
+        fused = engine.run(g, source, engine.make_strategy(strategy),
+                           op=op, mode="fused")
+        np.testing.assert_array_equal(stepped.dist.astype(np.int64), ref)
+        np.testing.assert_array_equal(fused.dist, stepped.dist)
+        assert fused.iterations == stepped.iterations
+
+    @settings(max_examples=10, deadline=None)
+    @given(case=edge_lists(), strategy=st.sampled_from(SHARDED_STRATEGIES))
+    def test_hypothesis_sharded_differential(case, strategy):
+        src, dst, wt, source = case
+        g = CSRGraph.from_edges(src, dst, wt, _HN)
+        single = engine.run(g, source, engine.make_strategy(strategy),
+                            mode="fused")
+        sharded = engine.run(g, source, engine.make_strategy(strategy),
+                             mode="fused", shards=N_SHARDS)
+        np.testing.assert_array_equal(sharded.dist, single.dist)
+        assert sharded.iterations == single.iterations
+        assert sharded.edges_relaxed == single.edges_relaxed
+
+
+# ---------------------------------------------------------------------------
+# engine.fixed_point custom-seeding coverage (satellite)
+# ---------------------------------------------------------------------------
+
+ROAD = road_grid_graph(side=12, weighted=True, seed=7)
+
+
+@pytest.mark.parametrize("strategy", ["WD", "NS"])
+@pytest.mark.parametrize("mode", ["stepped", "fused"])
+def test_fixed_point_multi_source_seeding(strategy, mode):
+    """Two sources seeded at once == elementwise min of the two
+    single-source runs (min monoid; the standard multi-source identity)."""
+    s0, s1 = 0, ROAD.num_nodes - 1
+    a = engine.run(ROAD, s0, engine.make_strategy(strategy), mode=mode)
+    b = engine.run(ROAD, s1, engine.make_strategy(strategy), mode=mode)
+    expect = np.minimum(a.dist, b.dist)
+
+    def two_sources(n_alloc):
+        dist = (jnp.full((n_alloc,), INF, jnp.int32)
+                .at[s0].set(0).at[s1].set(0))
+        mask = (jnp.zeros((n_alloc,), jnp.bool_)
+                .at[s0].set(True).at[s1].set(True))
+        return dist, mask
+
+    got, it, edges = engine.fixed_point(
+        ROAD, engine.make_strategy(strategy), two_sources, mode=mode)
+    np.testing.assert_array_equal(got, expect)
+    assert it > 0 and edges > 0
+
+
+@pytest.mark.parametrize("mode", ["stepped", "fused"])
+def test_fixed_point_max_widest_seeding(mode):
+    """A non-min, non-CC init: two widest-path sources under the max
+    monoid — fixed point is the elementwise max of single runs."""
+    s0, s1 = 0, ROAD.num_nodes // 2
+    a = engine.run(ROAD, s0, engine.make_strategy("WD"), op="widest_path",
+                   mode=mode)
+    b = engine.run(ROAD, s1, engine.make_strategy("WD"), op="widest_path",
+                   mode=mode)
+    expect = np.maximum(a.dist, b.dist)
+
+    def two_sources(n_alloc):
+        dist = (jnp.zeros((n_alloc,), jnp.int32)
+                .at[s0].set(INF).at[s1].set(INF))
+        mask = (jnp.zeros((n_alloc,), jnp.bool_)
+                .at[s0].set(True).at[s1].set(True))
+        return dist, mask
+
+    got, _, _ = engine.fixed_point(
+        ROAD, engine.make_strategy("WD"), two_sources, op="widest_path",
+        mode=mode)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_fixed_point_max_iterations_cap():
+    """Hitting the cap stops both modes at the same partial state."""
+    def seed(n_alloc):
+        return (jnp.full((n_alloc,), INF, jnp.int32).at[0].set(0),
+                jnp.zeros((n_alloc,), jnp.bool_).at[0].set(True))
+
+    full, full_it, _ = engine.fixed_point(
+        ROAD, engine.make_strategy("WD"), seed)
+    assert full_it > 3                       # the cap below really bites
+    stepped, it_s, e_s = engine.fixed_point(
+        ROAD, engine.make_strategy("WD"), seed, max_iterations=3)
+    fused, it_f, e_f = engine.fixed_point(
+        ROAD, engine.make_strategy("WD"), seed, max_iterations=3,
+        mode="fused")
+    assert it_s == it_f == 3
+    assert e_s == e_f
+    np.testing.assert_array_equal(stepped, fused)
+    assert not np.array_equal(stepped, full)  # genuinely truncated
+
+
+def test_strategy_capabilities_unregistered_name():
+    with pytest.raises(KeyError, match="unknown strategy"):
+        strategy_capabilities("NOPE")
+    with pytest.raises(KeyError, match="registered"):
+        strategy_capabilities("")

@@ -23,7 +23,7 @@ from repro.algos import (bfs, connected_components, reference_widest,
 from repro.core import engine, operators
 from repro.core.graph import CSRGraph, INF
 from repro.core.operators import EdgeOp
-from repro.core.strategies import (DEFAULT_CAPABILITIES, FRONTIER_INIT,
+from repro.core.strategies import (FRONTIER_INIT, SHARDED_CAPABILITIES,
                                    STRATEGIES, register,
                                    strategy_capabilities)
 from repro.data import (erdos_renyi_graph, graph500_graph, rmat_graph,
@@ -246,7 +246,9 @@ def test_third_party_strategy_capability_composition():
         name = "_EPSUB"
 
     try:
-        assert strategy_capabilities("_CAPTEST") == DEFAULT_CAPABILITIES
+        # inherited capabilities win: a WD subclass keeps WD's full set
+        # (FRONTIER_INIT + SHARDABLE) unless it re-declares
+        assert strategy_capabilities("_CAPTEST") == SHARDED_CAPABILITIES
         assert strategy_capabilities("_NOCAP") == frozenset()
         assert FRONTIER_INIT not in strategy_capabilities("_EPSUB")
         g = GRAPHS["road"]

@@ -152,14 +152,14 @@ def test_gradient_compression_error_feedback():
     assert err.max() < np.abs(g).max() / 100       # 1% of range per block
     # shard_map round trip on a 1-device mesh
     mesh = jax.make_mesh((1,), ("data",))
-    from functools import partial
+    from repro.compat import shard_map
     from repro.runtime.compression import allreduce_compressed
 
     from jax.sharding import PartitionSpec as P
 
     def f(g, r):
         return allreduce_compressed(g, "data", r)
-    out, res = jax.jit(jax.shard_map(
+    out, res = jax.jit(shard_map(
         f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P())))(
         jnp.asarray(g), jnp.zeros_like(jnp.asarray(g)))
     np.testing.assert_allclose(np.asarray(out), np.asarray(deq), atol=1e-6)
