@@ -45,7 +45,7 @@ def get_graph(name: str, weighted: bool):
 def run_strategy(graph, strategy_name: str, *, source: int | None = None,
                  repeats: int = 2, record_degrees: bool = False,
                  mode: str = "stepped", op: str = "shortest_path",
-                 **kwargs) -> engine.RunResult:
+                 backend: str = "xla", **kwargs) -> engine.RunResult:
     """Warm-up run (jit compile) + best-of-N timed runs.
 
     The warm-up run is never a best-of candidate (its timings carry
@@ -54,7 +54,8 @@ def run_strategy(graph, strategy_name: str, *, source: int | None = None,
     strategy prep (NS morph, EP COO conversion) doesn't pick the winner.
 
     ``op`` selects the edge operator (docs/operators.md) — the relax
-    semantics under the strategy's schedule.
+    semantics under the strategy's schedule; ``backend`` the relax
+    kernel lowering (docs/backends.md).
 
     Default source = highest-outdegree node (inside the giant component —
     Graph500 practice; node 0 of a label-permuted Kronecker graph may
@@ -67,7 +68,8 @@ def run_strategy(graph, strategy_name: str, *, source: int | None = None,
     for i in range(repeats + 1):
         strat = engine.make_strategy(strategy_name, **kwargs)
         res = engine.run(graph, source, strat,
-                         record_degrees=record_degrees, mode=mode, op=op)
+                         record_degrees=record_degrees, mode=mode, op=op,
+                         backend=backend)
         if i == 0:
             continue                      # warm-up: compile time pollutes
         if best is None or res.traversal_seconds < best.traversal_seconds:

@@ -1,0 +1,89 @@
+"""Fig. 16 (extension): XLA vs Pallas relax-kernel backend, per strategy.
+
+``backend="pallas"`` (docs/backends.md) routes every relax through the
+fused scatter-combine kernels of ``repro.kernels.relax`` instead of the
+XLA gather/scatter HLO pipeline.  This module measures both backends in
+fused mode per strategy per graph family and reports MTEPS side by side
+plus the pallas/xla ratio.
+
+Every run is **parity-asserted** first: distances, iteration counts and
+relaxed-edge totals must be bit-identical across backends (the
+docs/backends.md contract) before any timing is recorded — a benchmark
+that silently measured a diverging kernel would be worse than useless.
+
+Caveat for reading the numbers on CPU: Pallas runs in **interpret
+mode** here (the CI-testable path), which serializes the kernel grid in
+the XLA emulator — the ratio column then measures interpret overhead,
+not TPU kernel quality.  On a real TPU backend the same entry points
+compile through Mosaic.  Graphs are sized below the main suite for the
+same reason (grid serialization is O(lanes), and the parity signal is
+scale-independent).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, run_strategy, save_result
+from repro.data import rmat_graph, road_grid_graph
+
+#: one power-law, one bounded-degree family (paper suite), scaled to the
+#: interpret-mode budget — see module docstring
+FIG16_GRAPHS = {
+    "rmat": lambda: rmat_graph(scale=9, edge_factor=8, weighted=True,
+                               seed=7),
+    "road": lambda: road_grid_graph(side=24, weighted=True, seed=7),
+}
+#: the CSR strategies with Pallas relax lowerings exercised here (EP/NS
+#: add memory/morph axes fig9-11 already cover; AD composes the other
+#: three and reports its kernel schedule)
+FIG16_STRATEGIES = ["BS", "WD", "HP", "AD"]
+
+
+def run(verbose: bool = True):
+    rows = []
+    for gname, make in FIG16_GRAPHS.items():
+        g = make()
+        for s in FIG16_STRATEGIES:
+            xla = run_strategy(g, s, mode="fused", backend="xla",
+                               repeats=1)
+            pallas = run_strategy(g, s, mode="fused", backend="pallas",
+                                  repeats=1)
+            np.testing.assert_array_equal(
+                pallas.dist, xla.dist,
+                err_msg=f"pallas dist diverged for {s} on {gname}")
+            assert pallas.iterations == xla.iterations, (
+                f"pallas iterations diverged for {s} on {gname}")
+            assert pallas.edges_relaxed == xla.edges_relaxed, (
+                f"pallas edge total diverged for {s} on {gname}")
+            rows.append({
+                "graph": gname, "strategy": s,
+                "iterations": xla.iterations,
+                "edges_relaxed": xla.edges_relaxed,
+                "xla_s": xla.traversal_seconds,
+                "pallas_s": pallas.traversal_seconds,
+                "mteps_xla": xla.mteps,
+                "mteps_pallas": pallas.mteps,
+                "pallas_over_xla": (
+                    pallas.traversal_seconds / xla.traversal_seconds
+                    if xla.traversal_seconds > 0 else 0.0),
+                "parity": "bit-identical",
+            })
+
+    save_result("fig16_pallas", {"rows": rows})
+    lines = []
+    for r in rows:
+        derived = (f"mteps_xla={r['mteps_xla']:.2f};"
+                   f"mteps_pallas={r['mteps_pallas']:.2f};"
+                   f"pallas_over_xla={r['pallas_over_xla']:.2f}x;"
+                   f"parity={r['parity']}")
+        lines.append(csv_line(
+            f"fig16_pallas/{r['graph']}/{r['strategy']}",
+            r["pallas_s"] * 1e6, derived))
+    if verbose:
+        print("\n".join(lines))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

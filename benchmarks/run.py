@@ -7,8 +7,8 @@ import sys
 def main() -> None:
     from benchmarks import (fig7_sssp, fig8_bfs, fig9_tradeoffs, fig10_ns,
                             fig11_chunking, fig12_adaptive, fig13_fused,
-                            fig14_operators, fig15_sharded, table2_graphs,
-                            moe_balance, lm_step)
+                            fig14_operators, fig15_sharded, fig16_pallas,
+                            table2_graphs, moe_balance, lm_step)
     modules = [
         ("table2_graphs", table2_graphs),
         ("fig7_sssp", fig7_sssp),
@@ -20,6 +20,7 @@ def main() -> None:
         ("fig13_fused", fig13_fused),
         ("fig14_operators", fig14_operators),
         ("fig15_sharded", fig15_sharded),
+        ("fig16_pallas", fig16_pallas),
         ("moe_balance", moe_balance),
         ("lm_step", lm_step),
     ]

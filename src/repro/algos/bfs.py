@@ -26,20 +26,22 @@ def _unweighted(graph: CSRGraph) -> CSRGraph:
 
 def bfs(graph: CSRGraph, source: int = 0, strategy: str = "WD",
         record_degrees: bool = False, mode: str = "stepped",
-        shards=None, partition: str = "degree",
+        shards=None, partition: str = "degree", backend: str = "xla",
         **strategy_kwargs) -> RunResult:
     """``mode="fused"`` runs the traversal as one device dispatch (see
     :mod:`repro.core.fused`); ``"stepped"`` keeps per-iteration stats;
     ``shards=S`` partitions the graph over S devices (fused mode,
-    SHARDABLE strategies — docs/sharding.md)."""
+    SHARDABLE strategies — docs/sharding.md); ``backend="pallas"`` swaps
+    the relax kernels for the fused Pallas lowering (docs/backends.md)."""
     strat = make_strategy(strategy, **strategy_kwargs)
     return run(_unweighted(graph), source, strat,
                record_degrees=record_degrees, mode=mode, shards=shards,
-               partition=partition)
+               partition=partition, backend=backend)
 
 
 def bfs_batch(graph: CSRGraph, sources, mode: str = "stepped",
-              shards=None, partition: str = "degree") -> BatchRunResult:
+              shards=None, partition: str = "degree",
+              backend: str = "xla") -> BatchRunResult:
     """Level-propagate from K sources concurrently (dist is ``[K, N]``)."""
     return run_batch(_unweighted(graph), sources, mode=mode, shards=shards,
-                     partition=partition)
+                     partition=partition, backend=backend)

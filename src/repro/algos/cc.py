@@ -36,6 +36,7 @@ def connected_components(graph, strategy: str = "WD",
                          max_iterations: int = 10000,
                          mode: str = "stepped",
                          shards=None, partition: str = "degree",
+                         backend: str = "xla",
                          **strategy_kwargs) -> np.ndarray:
     """Returns the min-node-id label of each node's (in-)component."""
     strat = make_strategy(strategy, **strategy_kwargs)
@@ -52,5 +53,5 @@ def connected_components(graph, strategy: str = "WD",
     labels, _, _ = fixed_point(
         graph, strat, every_node_its_own_label, op=operators.min_label,
         mode=mode, max_iterations=max_iterations, shards=shards,
-        partition=partition)
+        partition=partition, backend=backend)
     return labels

@@ -14,21 +14,24 @@ from repro.core.multi_source import BatchRunResult
 
 def sssp(graph: CSRGraph, source: int = 0, strategy: str = "WD",
          record_degrees: bool = False, mode: str = "stepped",
-         shards=None, partition: str = "degree",
+         shards=None, partition: str = "degree", backend: str = "xla",
          **strategy_kwargs) -> RunResult:
     """``mode="fused"`` runs the traversal as one device dispatch (see
     :mod:`repro.core.fused`); ``"stepped"`` keeps per-iteration stats;
     ``shards=S`` partitions the graph over S devices (fused mode,
-    SHARDABLE strategies — docs/sharding.md)."""
+    SHARDABLE strategies — docs/sharding.md); ``backend="pallas"`` swaps
+    the relax kernels for the fused Pallas lowering (docs/backends.md)."""
     assert graph.wt is not None, "SSSP needs a weighted graph"
     strat = make_strategy(strategy, **strategy_kwargs)
     return run(graph, source, strat, record_degrees=record_degrees,
-               mode=mode, shards=shards, partition=partition)
+               mode=mode, shards=shards, partition=partition,
+               backend=backend)
 
 
 def sssp_batch(graph: CSRGraph, sources, mode: str = "stepped",
-               shards=None, partition: str = "degree") -> BatchRunResult:
+               shards=None, partition: str = "degree",
+               backend: str = "xla") -> BatchRunResult:
     """Shortest paths from K sources concurrently (dist is ``[K, N]``)."""
     assert graph.wt is not None, "SSSP needs a weighted graph"
     return run_batch(graph, sources, mode=mode, shards=shards,
-                     partition=partition)
+                     partition=partition, backend=backend)

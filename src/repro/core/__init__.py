@@ -7,8 +7,9 @@ from repro.core.engine import (run, run_batch, fixed_point, make_strategy,  # no
 from repro.core.operators import (EdgeOp, OPERATORS, register_operator,  # noqa: F401
                                   shortest_path, min_label, widest_path,
                                   reach_count)
-from repro.core.strategies import (STRATEGIES, FRONTIER_INIT, SHARDABLE,  # noqa: F401
-                                   register, strategy_capabilities)
+from repro.core.strategies import (STRATEGIES, BACKENDS, FRONTIER_INIT,  # noqa: F401
+                                   PALLAS_BACKEND, SHARDABLE, register,
+                                   strategy_capabilities)
 from repro.core.multi_source import BatchRunResult  # noqa: F401
 from repro.core.node_split import find_mdt, split_graph  # noqa: F401
 from repro.core.shard import (ShardedCSRGraph, ShardInfo, partition,  # noqa: F401

@@ -37,9 +37,9 @@ from repro.core import operators
 from repro.core import shard as _shard
 from repro.core.graph import CSRGraph, INF
 from repro.core.strategies import (
-    EdgeBased, FRONTIER_INIT, IterStats, NodeSplitting, SHARDABLE,
-    StrategyBase, STRATEGIES, make_strategy, register,
-    strategy_capabilities)
+    BACKENDS, EdgeBased, FRONTIER_INIT, IterStats, NodeSplitting,
+    PALLAS_BACKEND, SHARDABLE, StrategyBase, STRATEGIES, make_strategy,
+    register, strategy_capabilities)
 
 
 @dataclasses.dataclass
@@ -55,6 +55,10 @@ class RunResult:
     strategy: str
     state_bytes: int                 # device bytes held by the strategy
     mode: str = "stepped"            # "stepped" or "fused"
+    #: relax-kernel backend of the run: "xla" (gather/scatter HLOs) or
+    #: "pallas" (fused scatter-combine kernels, repro.kernels.relax) —
+    #: bit-identical results either way (docs/backends.md)
+    backend: str = "xla"
     #: shard count of the run (1 = single-device).  ``edges_relaxed``
     #: counts each relaxed edge exactly once ACROSS shards (every shard
     #: sums only the masked degrees of nodes it owns and the totals are
@@ -118,11 +122,32 @@ def _check_sharding(strategy: StrategyBase, mode: str,
             f"stay single-device — docs/sharding.md)")
 
 
+def _check_backend(strategy: Optional[StrategyBase], backend: str,
+                   shards: Optional[int]) -> None:
+    """Validate a ``backend=`` request (shared by run/fixed_point and,
+    with ``strategy=None``, by the WD-only batch driver)."""
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "xla":
+        return
+    if shards is not None:
+        raise ValueError(
+            "backend='pallas' is single-device; the sharded kernels in "
+            "repro.core.shard run the XLA lowering under shard_map — "
+            "drop shards= or use backend='xla' (docs/backends.md)")
+    if strategy is not None and PALLAS_BACKEND not in strategy.capabilities:
+        raise ValueError(
+            f"strategy {strategy.name!r} does not declare the "
+            f"{PALLAS_BACKEND!r} capability; its kernels have no Pallas "
+            f"lowering — use backend='xla' (docs/backends.md)")
+
+
 def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         max_iterations: int = 100000, record_degrees: bool = False,
         mode: str = "stepped", op="shortest_path",
         shards: Optional[int] = None,
-        partition: str = "degree") -> RunResult:
+        partition: str = "degree", backend: str = "xla") -> RunResult:
     """Fixed-point driver.  With the default ``shortest_path`` operator,
     ``graph.wt is None`` ⇒ BFS levels, else SSSP distances; any other
     :class:`repro.core.operators.EdgeOp` (or registered name) swaps the
@@ -142,7 +167,14 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
     dist/iterations/edges to the single-device paths
     (:mod:`repro.core.shard`; ``partition`` picks the node split:
     ``"degree"`` balances edges per shard, ``"contiguous"`` node
-    counts)."""
+    counts).
+
+    ``backend="pallas"`` (strategies declaring
+    :data:`repro.core.strategies.PALLAS_BACKEND`; single-device only)
+    dispatches every relax through the fused scatter-combine kernels of
+    :mod:`repro.kernels.relax` instead of XLA gather/scatter —
+    bit-identical dist/iterations/edges in both modes
+    (docs/backends.md)."""
     if mode not in ("stepped", "fused"):
         raise ValueError(
             f"mode must be 'stepped' or 'fused', got {mode!r}")
@@ -151,6 +183,7 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
             "record_degrees collects per-iteration host-side stats; "
             "use mode='stepped'")
     _check_sharding(strategy, mode, shards)
+    _check_backend(strategy, backend, shards)
     op = operators.resolve(op)
     if graph.num_edges == 0:        # degenerate: nothing to relax
         dist = np.full(graph.num_nodes, op.identity,
@@ -160,7 +193,8 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
                          setup_seconds=0.0, kernel_seconds=0.0,
                          overhead_seconds=0.0, edges_relaxed=0,
                          iter_stats=[], strategy=strategy.name,
-                         state_bytes=0, mode=mode, shards=shards or 1)
+                         state_bytes=0, mode=mode, shards=shards or 1,
+                         backend=backend)
     t0 = time.perf_counter()
     state = strategy.setup(graph)
     splan = None
@@ -189,7 +223,7 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         else:
             dist, iterations, edges = _fused.run_fixed_point(
                 graph, state, strategy, dist, mask, op=op,
-                max_iterations=max_iterations)
+                max_iterations=max_iterations, backend=backend)
         total_s = time.perf_counter() - t_start
         if isinstance(strategy, NodeSplitting):
             dist = strategy.split_info.extract_original(dist)
@@ -203,12 +237,20 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
             total_seconds=total_s + setup_s, setup_seconds=setup_s,
             kernel_seconds=total_s, overhead_seconds=setup_s,
             edges_relaxed=edges, iter_stats=[], strategy=strategy.name,
-            state_bytes=state_bytes, mode="fused", shards=shards or 1)
+            state_bytes=state_bytes, mode="fused", shards=shards or 1,
+            backend=backend)
 
     iter_stats: list[IterStats] = []
     kernel_s = 0.0
     edges = 0
     t_start = time.perf_counter()
+
+    # only forward backend= when it deviates from the default: a
+    # third-party strategy without the PALLAS_BACKEND capability (whose
+    # iterate may predate the backend kwarg) must keep running
+    # unchanged on the XLA path — the capability gate above already
+    # rejected it for backend="pallas"
+    extra = {} if backend == "xla" else {"backend": backend}
 
     if isinstance(strategy, EdgeBased):
         wl, count = strategy.initial_worklist(state, source)
@@ -217,7 +259,7 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
             tk = time.perf_counter()
             relaxed = count          # worklist entries relaxed this round
             dist, new_mask, wl, count = strategy.relax_and_push(
-                state, dist, wl, count, op=op)
+                state, dist, wl, count, op=op, **extra)
             ready(dist)
             kernel_s += time.perf_counter() - tk
             edges += relaxed
@@ -231,7 +273,7 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
             tk = time.perf_counter()
             dist, new_mask, stats = strategy.iterate(
                 state, dist, mask, count, op=op,
-                record_degrees=record_degrees)
+                record_degrees=record_degrees, **extra)
             ready(dist)
             kernel_s += time.perf_counter() - tk
             iter_stats.append(stats)
@@ -250,14 +292,15 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         overhead_seconds=max(total_s - kernel_s, 0.0) + setup_s,
         edges_relaxed=int(edges), iter_stats=iter_stats,
         strategy=strategy.name,
-        state_bytes=strategy.state_bytes(state), mode="stepped")
+        state_bytes=strategy.state_bytes(state), mode="stepped",
+        backend=backend)
 
 
 def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
                 op="shortest_path", mode: str = "stepped",
                 max_iterations: int = 100000,
                 shards: Optional[int] = None,
-                partition: str = "degree"):
+                partition: str = "degree", backend: str = "xla"):
     """Run a strategy to its fixed point from a caller-supplied seeding.
 
     The escape hatch under :func:`run` for algorithms whose initial state
@@ -272,9 +315,10 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
     capability (EP's edge worklist cannot represent an arbitrary dense
     frontier).  ``shards=S`` runs the fused kernels per-shard under
     ``shard_map`` (fused mode + SHARDABLE strategies only — see
-    :func:`run` and docs/sharding.md).  Returns ``(values, iterations,
-    edges_relaxed)`` with ``values`` a host array on the *original* node
-    allocation."""
+    :func:`run` and docs/sharding.md); ``backend="pallas"`` swaps the
+    relax lowering (see :func:`run` and docs/backends.md).  Returns
+    ``(values, iterations, edges_relaxed)`` with ``values`` a host array
+    on the *original* node allocation."""
     if mode not in ("stepped", "fused"):
         raise ValueError(
             f"mode must be 'stepped' or 'fused', got {mode!r}")
@@ -284,6 +328,7 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
             f"{FRONTIER_INIT!r} capability; seeding an arbitrary frontier "
             f"needs a node strategy")
     _check_sharding(strategy, mode, shards)
+    _check_backend(strategy, backend, shards)
     op = operators.resolve(op)
     state = strategy.setup(graph)
     if isinstance(strategy, NodeSplitting):
@@ -300,12 +345,15 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
     elif mode == "fused":
         dist, it, edges = _fused.run_fixed_point(
             graph, state, strategy, dist, mask, op=op,
-            max_iterations=max_iterations)
+            max_iterations=max_iterations, backend=backend)
     else:
+        # same third-party-compat rule as run(): backend= only deviates
+        # from the default for strategies that declared PALLAS_BACKEND
+        extra = {} if backend == "xla" else {"backend": backend}
         count, it, edges = int(jnp.sum(mask)), 0, 0
         while count > 0 and it < max_iterations:
             dist, mask, stats = strategy.iterate(state, dist, mask, count,
-                                                 op=op)
+                                                 op=op, **extra)
             ready(dist)
             edges += stats.edges_processed
             count = int(jnp.sum(mask))
@@ -317,17 +365,21 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
 
 def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
               mode: str = "stepped", op="shortest_path",
-              shards: Optional[int] = None, partition: str = "degree"):
+              shards: Optional[int] = None, partition: str = "degree",
+              backend: str = "xla"):
     """Run K sources concurrently against one graph (dist is ``[K, N]``).
 
     Thin wrapper over :func:`repro.core.multi_source.run_batch`; kept here
     so single-source and batched entry points live side by side.
     ``shards=S`` (fused mode only) shards the graph over S devices and
-    vmaps the sharded WD step over the source axis (docs/sharding.md)."""
+    vmaps the sharded WD step over the source axis (docs/sharding.md);
+    ``backend="pallas"`` (single-device) swaps the relax lowering
+    (docs/backends.md)."""
     from repro.core import multi_source
     return multi_source.run_batch(graph, sources,
                                   max_iterations=max_iterations, mode=mode,
-                                  op=op, shards=shards, partition=partition)
+                                  op=op, shards=shards, partition=partition,
+                                  backend=backend)
 
 
 def reference_distances(graph: CSRGraph, source: int) -> np.ndarray:

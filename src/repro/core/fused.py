@@ -53,10 +53,19 @@ kernel    dense-mask semantics (chunk boundaries match the stepped driver,
           carry and surfaced as ``AdaptiveStrategy.kernel_counts``
 ========  =================================================================
 
+Every step (and the fixed-point dispatcher) additionally takes
+``backend="xla" | "pallas"``: "pallas" routes the per-chunk relax
+through the fused scatter-combine kernels of :mod:`repro.kernels.relax`
+while keeping the chunk schedule — and therefore dist/iterations/edge
+totals — bit-identical (docs/backends.md).
+
 Dispatch accounting: :data:`DISPATCH_COUNTS` increments once per traversal
 (host side, per ``_fixed_point`` call) and :data:`TRACE_COUNTS` increments
-only while jit traces (i.e. per compilation).  Tests assert "exactly one
-dispatch per traversal, zero recompiles when shapes repeat" from these.
+only while jit traces (i.e. per compilation).  Counters are keyed per
+backend (``"WD"`` for XLA, ``"pallas:WD"`` for Pallas), so tests can
+assert both "exactly one dispatch per traversal, zero recompiles when
+shapes repeat" and "switching backend does not recompile the XLA
+path".
 
 Everything in this module is fused-safe: no ``int()``, ``np.asarray`` or
 other host syncs inside traced code.  Host-side statistics (per-iteration
@@ -81,7 +90,8 @@ from repro.core.graph import CSRGraph
 from repro.core.operators import EdgeOp
 from repro.core.strategies import (
     AdaptiveStrategy, EdgeBased, HierarchicalProcessing, NodeBased,
-    NodeSplitting, WorkloadDecomposition, _apply_relax, _edge_weight)
+    NodeSplitting, WorkloadDecomposition, _apply_relax, _edge_weight,
+    pallas_relax_module, relax_fn)
 
 #: traversals started, per kernel — incremented once per fused fixed-point
 #: call on the host side.  ``DISPATCH_COUNTS[k]`` growing by exactly 1 per
@@ -118,17 +128,32 @@ def _limb_add(hi, lo, e):
 
 
 def _merge_path_relax(g: CSRGraph, dist, updated, work, cursor=None, *,
-                      op: EdgeOp = operators.shortest_path):
+                      op: EdgeOp = operators.shortest_path,
+                      backend: str = "xla"):
     """One synchronous merge-path relax over ``E`` edge lanes.
 
     ``work[n]`` is how many edges node ``n`` contributes; each lane
     binary-searches its (node, local-edge) pair in the prefix sum — the
     on-device replacement for host compaction.  ``cursor`` (optional)
     offsets every node's read position into its adjacency list (the HP
-    tail).  Returns ``(dist, updated, total_work)``."""
+    tail).  Returns ``(dist, updated, total_work)``.
+
+    ``backend="pallas"`` fuses the search and the relax in one kernel
+    (``repro.kernels.relax.wd_relax_lanes``) — the per-lane node index
+    never materializes."""
     prefix = jnp.cumsum(work)
     exclusive = prefix - work
     total = prefix[-1]
+    if backend == "pallas":
+        relax = pallas_relax_module()
+        start = (g.row_ptr[:-1] if cursor is None
+                 else g.row_ptr[:-1] + cursor)
+        src_ids = jnp.arange(g.num_nodes, dtype=jnp.int32)
+        prop, upd, _ = relax.wd_relax_lanes(
+            dist, prefix, exclusive, start, src_ids, g.col, g.wt,
+            cap_work=g.num_edges, op=op)
+        return (relax.apply_proposal(dist, prop, op),
+                updated | upd, total)
     k = jnp.arange(g.num_edges, dtype=jnp.int32)
     node = jnp.searchsorted(prefix, k, side="right").astype(jnp.int32)
     node = jnp.clip(node, 0, g.num_nodes - 1)
@@ -143,12 +168,13 @@ def _merge_path_relax(g: CSRGraph, dist, updated, work, cursor=None, *,
 
 
 def _bs_step(g: CSRGraph, dist, mask, *,
-             op: EdgeOp = operators.shortest_path):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
     """Dense BS: every node lane walks its own adjacency list in lockstep.
 
     Column ``d`` relaxes the ``d``-th edge of every frontier node — the
     same relax batches, in the same order, as ``bs_relax`` over a
     compacted frontier, so intra-iteration propagation is identical."""
+    relax = relax_fn(backend)
     deg = _masked_degrees(g, mask)
     base = g.row_ptr[:-1]
     nodes = jnp.arange(g.num_nodes, dtype=jnp.int32)
@@ -162,7 +188,7 @@ def _bs_step(g: CSRGraph, dist, mask, *,
         d, dist, updated = c
         valid = mask & (d < deg)
         eidx = jnp.clip(base + d, 0, g.num_edges - 1)
-        dist, updated, _ = _apply_relax(
+        dist, updated, _ = relax(
             dist, updated, nodes, g.col[eidx], _edge_weight(g, eidx), valid,
             op=op)
         return d + 1, dist, updated
@@ -173,19 +199,20 @@ def _bs_step(g: CSRGraph, dist, mask, *,
 
 
 def _wd_step(g: CSRGraph, dist, mask, *,
-             op: EdgeOp = operators.shortest_path):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
     """Dense WD: merge-path over the frontier's edges, ``E`` lanes.
 
     One synchronous ``_merge_path_relax`` over the masked degrees — same
     snapshot semantics as ``wd_relax``."""
     deg = _masked_degrees(g, mask)
     updated = jnp.zeros_like(mask)
-    dist, updated, total = _merge_path_relax(g, dist, updated, deg, op=op)
+    dist, updated, total = _merge_path_relax(g, dist, updated, deg, op=op,
+                                             backend=backend)
     return dist, updated, total
 
 
 def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int,
-             op: EdgeOp = operators.shortest_path):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
     """Dense HP: the stepped driver's hybrid, on device.
 
     ``count <= switch_threshold`` → straight WD (one synchronous pass);
@@ -199,8 +226,10 @@ def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int,
     base = g.row_ptr[:-1]
     nodes = jnp.arange(n, dtype=jnp.int32)
 
+    relax = relax_fn(backend)
+
     def small(dist):
-        dist, updated, _ = _wd_step(g, dist, mask, op=op)
+        dist, updated, _ = _wd_step(g, dist, mask, op=op, backend=backend)
         return dist, updated
 
     def big(dist):
@@ -221,7 +250,7 @@ def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int,
             valid = mask[:, None] & (pos < deg[:, None])
             eidx = jnp.clip(base[:, None] + pos, 0, e - 1).reshape(-1)
             src = jnp.broadcast_to(nodes[:, None], (n, mdt)).reshape(-1)
-            dist, updated, _ = _apply_relax(
+            dist, updated, _ = relax(
                 dist, updated, src, g.col[eidx], _edge_weight(g, eidx),
                 valid.reshape(-1), op=op)
             return i + 1, cursor + mdt, dist, updated
@@ -236,7 +265,7 @@ def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int,
         # nodes, all remaining edges in one synchronous pass)
         rem = jnp.where(mask, jnp.maximum(deg - cursor, 0), 0)
         dist, updated, _ = _merge_path_relax(g, dist, updated, rem, cursor,
-                                             op=op)
+                                             op=op, backend=backend)
         return dist, updated
 
     dist, updated = lax.cond(count <= switch_threshold, small, big, dist)
@@ -244,7 +273,7 @@ def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int,
 
 
 def _ep_step(g: CSRGraph, edge_src, dist, mask, *,
-             op: EdgeOp = operators.shortest_path):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
     """Dense EP: all ``E`` edge lanes, valid where the source is live.
 
     The dense analogue of a chunked edge worklist — deduplicated by
@@ -252,25 +281,25 @@ def _ep_step(g: CSRGraph, edge_src, dist, mask, *,
     valid = mask[edge_src]
     eidx = jnp.arange(g.num_edges, dtype=jnp.int32)
     updated = jnp.zeros_like(mask)
-    dist, updated, _ = _apply_relax(
+    dist, updated, _ = relax_fn(backend)(
         dist, updated, edge_src, g.col, _edge_weight(g, eidx), valid, op=op)
     return dist, updated, jnp.sum(valid.astype(jnp.int32))
 
 
 def _ns_step(g2: CSRGraph, child_parent, dist, mask, *,
-             op: EdgeOp = operators.shortest_path):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
     """Dense NS: mirror parent attributes onto children (the
     ``ns_activate`` gather — operator-generic, see strategies.py), then
     dense BS on the split graph."""
     dist = dist[child_parent]
     mask = mask | mask[child_parent]
-    return _bs_step(g2, dist, mask, op=op)
+    return _bs_step(g2, dist, mask, op=op, backend=backend)
 
 
 def _ad_step(g: CSRGraph, dist, mask, *, mdt: int, small_frontier: int,
              imbalance_threshold: float, hp_edges_threshold: int,
              switch_threshold: int,
-             op: EdgeOp = operators.shortest_path):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
     """On-device evaluation of ``choose_kernel``'s decision structure.
 
     Frontier statistics (count, degree sum, max degree, imbalance =
@@ -299,10 +328,11 @@ def _ad_step(g: CSRGraph, dist, mask, *, mdt: int, small_frontier: int,
 
     dist, updated, edges = lax.switch(
         idx,
-        [lambda d: _bs_step(g, d, mask, op=op),
-         lambda d: _wd_step(g, d, mask, op=op),
+        [lambda d: _bs_step(g, d, mask, op=op, backend=backend),
+         lambda d: _wd_step(g, d, mask, op=op, backend=backend),
          lambda d: _hp_step(g, d, mask, mdt=mdt,
-                            switch_threshold=switch_threshold, op=op)],
+                            switch_threshold=switch_threshold, op=op,
+                            backend=backend)],
         dist)
     return dist, updated, edges, idx
 
@@ -314,26 +344,40 @@ def _ad_step(g: CSRGraph, dist, mask, *, mdt: int, small_frontier: int,
 _AD_KERNEL_ORDER = ("BS", "WD", "HP")   # lax.switch branch order
 
 
+def _count_key(kernel: str, backend: str) -> str:
+    """Counter key for a (kernel, backend) pair.  The XLA keys keep
+    their historical bare names so "switching backend recompiles
+    nothing on the XLA path" is directly observable from
+    ``TRACE_COUNTS[kernel]``."""
+    return kernel if backend == "xla" else f"{backend}:{kernel}"
+
+
 @partial(jax.jit, static_argnames=(
     "kernel", "max_iterations", "mdt", "small_frontier",
-    "imbalance_threshold", "hp_edges_threshold", "switch_threshold", "op"))
+    "imbalance_threshold", "hp_edges_threshold", "switch_threshold", "op",
+    "backend"))
 def _fixed_point(g: CSRGraph, aux, dist, mask, *, kernel: str,
                  max_iterations: int, mdt: int = 1,
                  small_frontier: int = 512,
                  imbalance_threshold: float = 4.0,
                  hp_edges_threshold: int = 1 << 15,
                  switch_threshold: int = 1024,
-                 op: EdgeOp = operators.shortest_path):
+                 op: EdgeOp = operators.shortest_path,
+                 backend: str = "xla"):
     """Whole traversal, one dispatch.
 
     ``aux`` is the kernel's side table: per-edge source ids for ``EP``,
     the child→parent map for ``NS``, a 1-element dummy otherwise.  ``op``
-    is the (static) edge operator defining the relax semantics.  The
-    carry is ``(it, dist, mask, edges_hi, edges_lo, kernel_counts)`` —
-    the edge total rides in a two-limb int32 accumulator (``_limb_add``)
-    so it stays exact past 2^31; ``kernel_counts`` only moves for
-    ``AD``."""
-    TRACE_COUNTS[kernel] += 1    # Python side effect ⇒ counts compilations
+    is the (static) edge operator defining the relax semantics, and
+    ``backend`` picks the relax lowering (XLA gather/scatter vs the
+    Pallas fused scatter-combine — same chunk schedule, bit-identical
+    results).  The carry is ``(it, dist, mask, edges_hi, edges_lo,
+    kernel_counts)`` — the edge total rides in a two-limb int32
+    accumulator (``_limb_add``) so it stays exact past 2^31;
+    ``kernel_counts`` only moves for ``AD``."""
+    # Python side effect ⇒ counts compilations, keyed per backend so the
+    # XLA cache entry observably survives backend switches
+    TRACE_COUNTS[_count_key(kernel, backend)] += 1
 
     def frontier_live(mask):
         if kernel == "EP":
@@ -349,23 +393,27 @@ def _fixed_point(g: CSRGraph, aux, dist, mask, *, kernel: str,
     def body(c):
         it, dist, mask, e_hi, e_lo, kcounts = c
         if kernel == "BS":
-            dist, new_mask, e = _bs_step(g, dist, mask, op=op)
+            dist, new_mask, e = _bs_step(g, dist, mask, op=op,
+                                         backend=backend)
         elif kernel == "WD":
-            dist, new_mask, e = _wd_step(g, dist, mask, op=op)
+            dist, new_mask, e = _wd_step(g, dist, mask, op=op,
+                                         backend=backend)
         elif kernel == "HP":
             dist, new_mask, e = _hp_step(
                 g, dist, mask, mdt=mdt, switch_threshold=switch_threshold,
-                op=op)
+                op=op, backend=backend)
         elif kernel == "EP":
-            dist, new_mask, e = _ep_step(g, aux, dist, mask, op=op)
+            dist, new_mask, e = _ep_step(g, aux, dist, mask, op=op,
+                                         backend=backend)
         elif kernel == "NS":
-            dist, new_mask, e = _ns_step(g, aux, dist, mask, op=op)
+            dist, new_mask, e = _ns_step(g, aux, dist, mask, op=op,
+                                         backend=backend)
         elif kernel == "AD":
             dist, new_mask, e, idx = _ad_step(
                 g, dist, mask, mdt=mdt, small_frontier=small_frontier,
                 imbalance_threshold=imbalance_threshold,
                 hp_edges_threshold=hp_edges_threshold,
-                switch_threshold=switch_threshold, op=op)
+                switch_threshold=switch_threshold, op=op, backend=backend)
             kcounts = kcounts.at[idx].add(1)
         else:  # pragma: no cover - guarded by _plan
             raise ValueError(f"unknown fused kernel {kernel!r}")
@@ -433,23 +481,24 @@ def _plan(strategy, state, graph: CSRGraph) -> FusedPlan:
 
 def run_fixed_point(graph: CSRGraph, state: Any, strategy, dist0, mask0, *,
                     op: EdgeOp = operators.shortest_path,
-                    max_iterations: int = 100000):
+                    max_iterations: int = 100000, backend: str = "xla"):
     """Run one strategy's whole traversal as a single fused dispatch.
 
     ``dist0``/``mask0`` are the initial value/frontier arrays on the
     strategy's allocation (the split graph's for NS) — callers own
     seeding (single source, multi-source CC labels, ...) and extraction;
-    ``op`` is the edge operator defining what the traversal computes.
-    Returns ``(dist, iterations, edges_relaxed)`` with the first still on
+    ``op`` is the edge operator defining what the traversal computes and
+    ``backend`` the relax lowering (docs/backends.md).  Returns
+    ``(dist, iterations, edges_relaxed)`` with the first still on
     device; for AD the kernel tally is stored on the strategy as
     ``kernel_counts``, mirroring the stepped driver."""
     plan = _plan(strategy, state, graph)
-    DISPATCH_COUNTS[plan.kernel] += 1
+    DISPATCH_COUNTS[_count_key(plan.kernel, backend)] += 1
     aux = (jnp.zeros((1,), jnp.int32) if plan.aux is None else plan.aux)
     dist, it, e_hi, e_lo, kcounts = _fixed_point(
         plan.graph, aux, dist0, mask0, kernel=plan.kernel,
         max_iterations=max_iterations, op=operators.resolve(op),
-        **plan.static)
+        backend=backend, **plan.static)
     jax.block_until_ready(dist)
     if plan.kernel == "AD":
         counts = [int(c) for c in kcounts]
@@ -462,10 +511,11 @@ def run_fixed_point(graph: CSRGraph, state: Any, strategy, dist0, mask0, *,
 # batched multi-source fixed point (K queries, zero host syncs)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("max_iterations", "op"))
+@partial(jax.jit, static_argnames=("max_iterations", "op", "backend"))
 def _batch_fixed_point(g: CSRGraph, dist_b, mask_b, *,
                        max_iterations: int,
-                       op: EdgeOp = operators.shortest_path):
+                       op: EdgeOp = operators.shortest_path,
+                       backend: str = "xla"):
     """All K queries to their fixed points in one dispatch.
 
     The dense WD step vmapped over the source axis inside one while_loop
@@ -473,7 +523,7 @@ def _batch_fixed_point(g: CSRGraph, dist_b, mask_b, *,
     per-iteration dispatch.  Iterations count until *every* row's
     frontier is empty (the batch's fixed point), matching the stepped
     driver; the edge total sums the per-row masked degree sums."""
-    TRACE_COUNTS["batch"] += 1
+    TRACE_COUNTS[_count_key("batch", backend)] += 1
 
     def cond(c):
         it, _, mask_b = c[0], c[1], c[2]
@@ -482,7 +532,8 @@ def _batch_fixed_point(g: CSRGraph, dist_b, mask_b, *,
     def body(c):
         it, dist_b, mask_b, e_hi, e_lo = c
         dist_b, mask_b, e = jax.vmap(
-            lambda d, m: _wd_step(g, d, m, op=op))(dist_b, mask_b)
+            lambda d, m: _wd_step(g, d, m, op=op, backend=backend))(
+            dist_b, mask_b)
         # fold the K per-row totals one _limb_add at a time (each row is
         # < 2^31, but even the per-row remainders could wrap a plain
         # int32 sum once K is large)
@@ -500,11 +551,12 @@ def _batch_fixed_point(g: CSRGraph, dist_b, mask_b, *,
 
 def run_batch_fixed_point(graph: CSRGraph, dist_b, mask_b, *,
                           op: EdgeOp = operators.shortest_path,
-                          max_iterations: int = 100000):
+                          max_iterations: int = 100000,
+                          backend: str = "xla"):
     """Host wrapper for :func:`_batch_fixed_point` (dispatch-counted)."""
-    DISPATCH_COUNTS["batch"] += 1
+    DISPATCH_COUNTS[_count_key("batch", backend)] += 1
     dist_b, it, e_hi, e_lo = _batch_fixed_point(
         graph, dist_b, mask_b, max_iterations=max_iterations,
-        op=operators.resolve(op))
+        op=operators.resolve(op), backend=backend)
     jax.block_until_ready(dist_b)
     return dist_b, int(it), int(e_hi) * _LIMB + int(e_lo)

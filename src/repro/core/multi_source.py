@@ -71,6 +71,8 @@ class BatchRunResult:
     #: shard count (1 = single-device); ``edges_relaxed`` counts each
     #: relaxed edge exactly once across shards (see docs/sharding.md)
     shards: int = 1
+    #: relax-kernel backend ("xla" or "pallas", docs/backends.md)
+    backend: str = "xla"
 
     @property
     def mteps(self) -> float:
@@ -85,20 +87,23 @@ class BatchRunResult:
         return self.sources.shape[0] / self.total_seconds
 
 
-@partial(jax.jit, static_argnames=("cap", "cap_work", "op"))
+@partial(jax.jit, static_argnames=("cap", "cap_work", "op", "backend"))
 def batched_wd_relax(g: CSRGraph, dist_b, mask_b, *, cap: int,
                      cap_work: int,
-                     op: EdgeOp = operators.shortest_path):
+                     op: EdgeOp = operators.shortest_path,
+                     backend: str = "xla"):
     """One relax iteration for all K sources: vmap of compact + WD relax.
 
     ``cap`` (frontier slots) and ``cap_work`` (edge lanes) are shared by
     the whole batch — the largest per-source requirement, bucketed.  The
     edge operator rides into the vmapped body as a static closure, so all
-    K rows relax under identical semantics."""
+    K rows relax under identical semantics; ``backend`` picks the relax
+    lowering per row (docs/backends.md)."""
     def one(dist, mask):
         frontier = compact_mask(mask, cap)
         cursor = jnp.zeros((cap,), jnp.int32)
-        return wd_relax(g, dist, frontier, cursor, cap_work=cap_work, op=op)
+        return wd_relax(g, dist, frontier, cursor, cap_work=cap_work, op=op,
+                        backend=backend)
 
     return jax.vmap(one)(dist_b, mask_b)
 
@@ -131,7 +136,8 @@ def refill_slot(dist_b, mask_b, slot: jax.Array, source: jax.Array,
 def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
               mode: str = "stepped", op="shortest_path",
               shards: Optional[int] = None,
-              partition: str = "degree") -> BatchRunResult:
+              partition: str = "degree",
+              backend: str = "xla") -> BatchRunResult:
     """Fixed-point driver over K sources at once.
 
     Semantics match K independent ``engine.run`` calls exactly (same
@@ -144,6 +150,9 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
     partitions the graph over S devices and vmaps the *sharded* WD step
     over the source axis — bit-identical dist/iterations/edges to the
     single-device batch (:mod:`repro.core.shard`, docs/sharding.md).
+    ``backend="pallas"`` (single-device) routes every row's WD relax
+    through the fused Pallas kernel — bit-identical again
+    (docs/backends.md).
     """
     if mode not in ("stepped", "fused"):
         raise ValueError(
@@ -153,6 +162,8 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
             "sharded batches run the whole fixed point on-device under "
             "shard_map, i.e. the fused engine; pass mode='fused' "
             "(docs/sharding.md)")
+    from repro.core.engine import _check_backend
+    _check_backend(None, backend, shards)
     op = operators.resolve(op)
     np_dtype = np.dtype(op.dtype)
     sources = np.asarray(sources, np.int32)
@@ -162,13 +173,15 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
         return BatchRunResult(dist=np.zeros((0, n), np_dtype),
                               sources=sources, iterations=0,
                               total_seconds=0.0, edges_relaxed=0,
-                              iter_stats=[], mode=mode, shards=shards or 1)
+                              iter_stats=[], mode=mode, shards=shards or 1,
+                              backend=backend)
     if graph.num_edges == 0:
         dist = np.full((k, n), op.identity, np_dtype)
         dist[np.arange(k), sources] = op.seed(sources)
         return BatchRunResult(dist=dist, sources=sources, iterations=0,
                               total_seconds=0.0, edges_relaxed=0,
-                              iter_stats=[], mode=mode, shards=shards or 1)
+                              iter_stats=[], mode=mode, shards=shards or 1,
+                              backend=backend)
 
     t0 = time.perf_counter()
     dist_b, mask_b = init_batch(n, jnp.asarray(sources), op=op)
@@ -189,12 +202,13 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
     if mode == "fused":
         from repro.core import fused
         dist_b, iterations, edges = fused.run_batch_fixed_point(
-            graph, dist_b, mask_b, op=op, max_iterations=max_iterations)
+            graph, dist_b, mask_b, op=op, max_iterations=max_iterations,
+            backend=backend)
         total_s = time.perf_counter() - t0
         return BatchRunResult(dist=np.asarray(dist_b), sources=sources,
                               iterations=iterations, total_seconds=total_s,
                               edges_relaxed=edges, iter_stats=[],
-                              mode="fused")
+                              mode="fused", backend=backend)
 
     degrees = np.asarray(graph.degrees)
     iter_stats: list[IterStats] = []
@@ -211,7 +225,8 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
         cap = bucket(widest)
         cap_work = bucket(int(totals.max()))
         dist_b, mask_b = batched_wd_relax(graph, dist_b, mask_b,
-                                          cap=cap, cap_work=cap_work, op=op)
+                                          cap=cap, cap_work=cap_work, op=op,
+                                          backend=backend)
         jax.block_until_ready(dist_b)
         edges += int(totals.sum())
         iter_stats.append(IterStats(frontier_size=widest,
@@ -221,4 +236,5 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
     total_s = time.perf_counter() - t0
     return BatchRunResult(dist=np.asarray(dist_b), sources=sources,
                           iterations=it, total_seconds=total_s,
-                          edges_relaxed=edges, iter_stats=iter_stats)
+                          edges_relaxed=edges, iter_stats=iter_stats,
+                          backend=backend)

@@ -44,11 +44,18 @@ CUDA-thread semantics map to dense vectorized batches:
   * atomicMin/Max/Add        →  dist.at[d].min/max/add     (op.scatter)
   * worklist push w/chunking →  flag → cumsum → run_fill   (1 slot/node)
   * Thrust inclusive_scan    →  jnp.cumsum
-  * find_offsets kernel      →  vectorized searchsorted (merge-path); the
-                                Pallas in-VMEM variant lives in
-                                repro.kernels.find_offsets
+  * find_offsets kernel      →  vectorized searchsorted (merge-path)
 Load imbalance materializes as masked/padded lanes — measurable as wasted
 FLOPs/bytes rather than warp divergence (see repro.core.balance).
+
+Every relax kernel additionally takes ``backend="xla" | "pallas"``
+(:data:`BACKENDS`): "xla" is the gather/scatter lowering described
+above; "pallas" routes the *same chunk schedule* through the fused
+scatter-combine kernels of :mod:`repro.kernels.relax` (gather + message
++ activation + segment combine in VMEM, and for WD the merge-path
+search fused with the relax), with bit-identical results — see
+docs/backends.md.  Strategies advertise support via the
+:data:`PALLAS_BACKEND` capability.
 """
 
 from __future__ import annotations
@@ -67,10 +74,17 @@ from repro.core.graph import CSRGraph, COOGraph
 from repro.core.operators import EdgeOp
 from repro.core.worklist import bucket, compact_mask, run_fill
 
-try:  # optional Pallas fast path for the WD offset search
-    from repro.kernels import find_offsets as _pallas_find_offsets
+try:  # optional Pallas relax backend (backend="pallas", docs/backends.md)
+    from repro.kernels import relax as _pallas_relax
 except Exception:  # pragma: no cover - kernels are optional at import time
-    _pallas_find_offsets = None
+    _pallas_relax = None
+
+
+#: execution backends of the relax kernels.  "xla" is the plain
+#: gather/scatter lowering; "pallas" routes the same chunk schedule
+#: through the fused scatter-combine kernels in repro.kernels.relax
+#: (bit-identical results — docs/backends.md).
+BACKENDS = ("xla", "pallas")
 
 
 # ---------------------------------------------------------------------------
@@ -101,19 +115,46 @@ def _apply_relax(dist, updated, src, dst, w, valid, *,
     return dist, updated, improve
 
 
+def pallas_relax_module():
+    """The :mod:`repro.kernels.relax` module, or a ``RuntimeError`` when
+    the optional Pallas import failed — the single availability check
+    every ``backend="pallas"`` code path (here and in
+    :mod:`repro.core.fused`) goes through."""
+    if _pallas_relax is None:  # pragma: no cover - import-time guard
+        raise RuntimeError(
+            "backend='pallas' needs repro.kernels.relax (Pallas "
+            "failed to import)")
+    return _pallas_relax
+
+
+def relax_fn(backend: str):
+    """The relax primitive for a backend: :func:`_apply_relax` (XLA
+    gather/scatter) or the signature-compatible Pallas drop-in
+    (``repro.kernels.relax.apply_relax`` — fused scatter-combine in
+    VMEM).  Every kernel below dispatches through this, so the chunk
+    schedule — and therefore the bit-exact results — never depends on
+    the backend."""
+    if backend == "xla":
+        return _apply_relax
+    if backend == "pallas":
+        return pallas_relax_module().apply_relax
+    raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+
+
 # ---------------------------------------------------------------------------
 # BS — node-based baseline (LonestarGPU-style)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap", "op"))
+@partial(jax.jit, static_argnames=("cap", "op", "backend"))
 def bs_relax(g: CSRGraph, dist, frontier, *, cap: int,
-             op: EdgeOp = operators.shortest_path):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
     """Each frontier slot ("thread") walks its own adjacency list.
 
     The walk runs for max-degree-in-frontier steps with lanes masked once
     their node is exhausted — the TPU manifestation of the paper's
     node-based imbalance (idle lanes ∝ degree variance)."""
     del cap  # shapes already carry it; kept for bucketed specialization
+    relax = relax_fn(backend)
     mask = frontier >= 0
     f = jnp.where(mask, frontier, 0)
     deg = jnp.where(mask, g.row_ptr[f + 1] - g.row_ptr[f], 0)
@@ -128,7 +169,7 @@ def bs_relax(g: CSRGraph, dist, frontier, *, cap: int,
         d, dist, updated = c
         valid = mask & (d < deg)
         eidx = jnp.clip(base + d, 0, g.num_edges - 1)
-        dist, updated, _ = _apply_relax(
+        dist, updated, _ = relax(
             dist, updated, f, g.col[eidx], _edge_weight(g, eidx), valid,
             op=op)
         return d + 1, dist, updated
@@ -142,9 +183,9 @@ def bs_relax(g: CSRGraph, dist, frontier, *, cap: int,
 # EP — edge-based parallelism over a COO edge worklist
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap", "op"))
+@partial(jax.jit, static_argnames=("cap", "op", "backend"))
 def ep_relax(coo: COOGraph, dist, edge_wl, *, cap: int,
-             op: EdgeOp = operators.shortest_path):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
     """One lane per worklist edge — near-perfect balance (paper §II-B)."""
     del cap
     mask = edge_wl >= 0
@@ -152,8 +193,8 @@ def ep_relax(coo: COOGraph, dist, edge_wl, *, cap: int,
     src, dst = coo.src[e], coo.dst[e]
     w = _edge_weight(coo, e)
     updated = jnp.zeros((dist.shape[0],), jnp.bool_)
-    dist, updated, improve = _apply_relax(dist, updated, src, dst, w, mask,
-                                          op=op)
+    dist, updated, improve = relax_fn(backend)(dist, updated, src, dst, w,
+                                               mask, op=op)
     return dist, updated, improve, dst
 
 
@@ -185,16 +226,21 @@ def ep_push_unchunked(row_ptr, improve, dst, total, *, cap_out: int):
 # WD — workload decomposition (merge-path over the frontier's edges)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap_work", "use_pallas", "op"))
+@partial(jax.jit, static_argnames=("cap_work", "op", "backend"))
 def wd_relax(g: CSRGraph, dist, frontier, cursor, *, cap_work: int,
-             use_pallas: bool = False,
-             op: EdgeOp = operators.shortest_path):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
     """Block-distribute the frontier's edges across ``cap_work`` lanes.
 
     prefix-sum over (remaining) frontier degrees, then every work item k
     locates its (node, local edge) via binary search — the vectorized
     equivalent of the paper's ``find_offsets`` + per-thread while-walk
-    (Fig. 4), with no serialization."""
+    (Fig. 4), with no serialization.
+
+    ``backend="pallas"`` routes through
+    :func:`repro.kernels.relax.wd_relax_lanes`, which fuses the
+    merge-path search *and* the relax in one kernel — the ``node_idx``
+    array never materializes (this replaces the old
+    ``use_pallas=True`` find_offsets-only fast path)."""
     mask = frontier >= 0
     f = jnp.where(mask, frontier, 0)
     deg = jnp.where(mask, g.row_ptr[f + 1] - g.row_ptr[f] - cursor, 0)
@@ -202,18 +248,22 @@ def wd_relax(g: CSRGraph, dist, frontier, cursor, *, cap_work: int,
     prefix = jnp.cumsum(deg)
     exclusive = prefix - deg
     total = prefix[-1]
+    updated = jnp.zeros((dist.shape[0],), jnp.bool_)
+    if backend == "pallas":
+        relax = pallas_relax_module()
+        start = g.row_ptr[f] + cursor
+        prop, upd, _ = relax.wd_relax_lanes(
+            dist, prefix, exclusive, start, f, g.col, g.wt,
+            cap_work=cap_work, op=op)
+        return relax.apply_proposal(dist, prop, op), updated | upd
     k = jnp.arange(cap_work, dtype=jnp.int32)
-    if use_pallas and _pallas_find_offsets is not None:
-        node_idx = _pallas_find_offsets.find_offsets(prefix, cap_work)
-    else:
-        node_idx = jnp.searchsorted(prefix, k, side="right").astype(jnp.int32)
+    node_idx = jnp.searchsorted(prefix, k, side="right").astype(jnp.int32)
     node_idx = jnp.clip(node_idx, 0, frontier.shape[0] - 1)
     src = f[node_idx]
     local = k - exclusive[node_idx]
     eidx = jnp.clip(g.row_ptr[src] + cursor[node_idx] + local,
                     0, g.num_edges - 1)
     valid = k < total
-    updated = jnp.zeros((dist.shape[0],), jnp.bool_)
     dist, updated, _ = _apply_relax(
         dist, updated, src, g.col[eidx], _edge_weight(g, eidx), valid,
         op=op)
@@ -246,9 +296,10 @@ def ns_activate(dist2, mask2, child_parent):
 # HP — hierarchical processing (≤ MDT edges per node per sub-iteration)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap", "mdt", "op"))
+@partial(jax.jit, static_argnames=("cap", "mdt", "op", "backend"))
 def hp_sub_relax(g: CSRGraph, dist, sub, cursor, *, cap: int, mdt: int,
-                 op: EdgeOp = operators.shortest_path):
+                 op: EdgeOp = operators.shortest_path,
+                 backend: str = "xla"):
     """One sub-iteration: every sublist node processes its next ≤MDT edges
     (a dense [cap, MDT] tile — all lanes bounded by MDT, i.e. balanced
     within the threshold, §III-C).  Returns the surviving sublist mask."""
@@ -262,7 +313,7 @@ def hp_sub_relax(g: CSRGraph, dist, sub, cursor, *, cap: int, mdt: int,
     eidx = jnp.clip(g.row_ptr[n][:, None] + pos, 0, g.num_edges - 1)
     src = jnp.broadcast_to(n[:, None], eidx.shape).reshape(-1)
     updated = jnp.zeros((dist.shape[0],), jnp.bool_)
-    dist, updated, _ = _apply_relax(
+    dist, updated, _ = relax_fn(backend)(
         dist, updated, src, g.col[eidx.reshape(-1)],
         _edge_weight(g, eidx.reshape(-1)), valid.reshape(-1), op=op)
     new_cursor = cursor + mdt
@@ -306,14 +357,24 @@ FRONTIER_INIT = "frontier_init"
 #: statistics) — see docs/sharding.md.
 SHARDABLE = "shardable"
 
+#: capability: every kernel the strategy dispatches accepts
+#: ``backend="pallas"`` (the fused scatter-combine kernels of
+#: :mod:`repro.kernels.relax`) with bit-identical results — the gate
+#: ``engine.run(..., backend=)`` checks.  All six built-ins declare it;
+#: a third-party strategy whose ``iterate`` ignores the ``backend``
+#: kwarg must not (docs/backends.md).
+PALLAS_BACKEND = "pallas_backend"
+
 #: capabilities a plain StrategyBase subclass declares unless it says
 #: otherwise at registration (or via a ``capabilities`` class attribute).
-#: Deliberately excludes :data:`SHARDABLE`: a third-party strategy is
-#: single-device until it ships a sharded lowering and says so.
+#: Deliberately excludes :data:`SHARDABLE` and :data:`PALLAS_BACKEND`:
+#: a third-party strategy is single-device and XLA-only until it ships
+#: the corresponding lowerings and says so.
 DEFAULT_CAPABILITIES = frozenset({FRONTIER_INIT})
 
 #: what the four built-in shardable strategies declare
-SHARDED_CAPABILITIES = frozenset({FRONTIER_INIT, SHARDABLE})
+SHARDED_CAPABILITIES = frozenset({FRONTIER_INIT, SHARDABLE,
+                                  PALLAS_BACKEND})
 
 
 class StrategyBase:
@@ -344,7 +405,7 @@ class StrategyBase:
 
     def iterate(self, state, dist, updated_mask, count, *,
                 op: EdgeOp = operators.shortest_path,
-                record_degrees=False):
+                record_degrees=False, backend: str = "xla"):
         raise NotImplementedError
 
 
@@ -408,11 +469,13 @@ class NodeBased(StrategyBase):
     capabilities = SHARDED_CAPABILITIES
 
     def iterate(self, g, dist, updated_mask, count, *,
-                op: EdgeOp = operators.shortest_path, record_degrees=False):
+                op: EdgeOp = operators.shortest_path, record_degrees=False,
+                backend: str = "xla"):
         cap = bucket(count)
         frontier = compact_mask(updated_mask, cap)
         stats = _frontier_stats(g, frontier, count, record_degrees)
-        dist, new_mask = bs_relax(g, dist, frontier, cap=cap, op=op)
+        dist, new_mask = bs_relax(g, dist, frontier, cap=cap, op=op,
+                                  backend=backend)
         return dist, new_mask, stats
 
 
@@ -424,7 +487,7 @@ class EdgeBased(StrategyBase):
     adjacency run, so algorithms needing an arbitrary initial frontier
     (CC's all-nodes-active seeding) must pick a node strategy."""
     name = "EP"
-    capabilities = frozenset()
+    capabilities = frozenset({PALLAS_BACKEND})
 
     def __init__(self, chunked: bool = True, wl_capacity_factor: float = 4.0,
                  memory_budget_bytes: Optional[int] = None):
@@ -453,10 +516,11 @@ class EdgeBased(StrategyBase):
         return jnp.asarray(wl), deg
 
     def relax_and_push(self, coo, dist, edge_wl, count, *,
-                       op: EdgeOp = operators.shortest_path):
+                       op: EdgeOp = operators.shortest_path,
+                       backend: str = "xla"):
         cap = edge_wl.shape[0]
         dist, new_mask, improve, dst = ep_relax(coo, dist, edge_wl, cap=cap,
-                                                op=op)
+                                                op=op, backend=backend)
         if self.chunked:
             nodes_np = np.asarray(new_mask)
             total = int(self._degrees[nodes_np].sum())
@@ -489,16 +553,13 @@ class WorkloadDecomposition(StrategyBase):
     name = "WD"
     capabilities = SHARDED_CAPABILITIES
 
-    def __init__(self, use_pallas: bool = False):
-        self.use_pallas = use_pallas
-
     def setup(self, graph: CSRGraph):
         self._degrees = np.asarray(graph.degrees)
         return graph
 
     def iterate(self, g, dist, updated_mask, count, *,
                 op: EdgeOp = operators.shortest_path, record_degrees=False,
-                edge_total=None):
+                edge_total=None, backend: str = "xla"):
         cap = bucket(count)
         frontier = compact_mask(updated_mask, cap)
         stats = _frontier_stats(g, frontier, count, record_degrees)
@@ -509,8 +570,8 @@ class WorkloadDecomposition(StrategyBase):
                  if edge_total is None else int(edge_total))
         cursor = jnp.zeros((cap,), jnp.int32)
         dist, new_mask = wd_relax(g, dist, frontier, cursor,
-                                  cap_work=bucket(total),
-                                  use_pallas=self.use_pallas, op=op)
+                                  cap_work=bucket(total), op=op,
+                                  backend=backend)
         stats.edges_processed = total
         return dist, new_mask, stats
 
@@ -532,7 +593,8 @@ class NodeSplitting(StrategyBase):
         return self.split_info
 
     def iterate(self, sg, dist, updated_mask, count, *,
-                op: EdgeOp = operators.shortest_path, record_degrees=False):
+                op: EdgeOp = operators.shortest_path, record_degrees=False,
+                backend: str = "xla"):
         g2 = sg.graph
         # mirror parent dist onto children + co-activate children
         dist, mask2 = ns_activate(dist, updated_mask, sg.child_parent)
@@ -540,7 +602,8 @@ class NodeSplitting(StrategyBase):
         cap = bucket(count2)
         frontier = compact_mask(mask2, cap)
         stats = _frontier_stats(g2, frontier, count2, record_degrees)
-        dist, new_mask = bs_relax(g2, dist, frontier, cap=cap, op=op)
+        dist, new_mask = bs_relax(g2, dist, frontier, cap=cap, op=op,
+                                  backend=backend)
         return dist, new_mask, stats
 
     def state_bytes(self, sg):
@@ -568,7 +631,8 @@ class HierarchicalProcessing(StrategyBase):
         return graph
 
     def iterate(self, g, dist, updated_mask, count, *,
-                op: EdgeOp = operators.shortest_path, record_degrees=False):
+                op: EdgeOp = operators.shortest_path, record_degrees=False,
+                backend: str = "xla"):
         cap = bucket(count)
         frontier = compact_mask(updated_mask, cap)
         stats = _frontier_stats(g, frontier, count, record_degrees)
@@ -578,7 +642,7 @@ class HierarchicalProcessing(StrategyBase):
         # Hybrid: small super list -> straight WD (paper §III-C)
         if count <= self.switch_threshold:
             dist, new_mask, sub_stats = self._wd.iterate(
-                g, dist, updated_mask, count, op=op)
+                g, dist, updated_mask, count, op=op, backend=backend)
             stats.edges_processed = sub_stats.edges_processed
             return dist, new_mask, stats
 
@@ -587,7 +651,8 @@ class HierarchicalProcessing(StrategyBase):
         subiters = 0
         while live > self.switch_threshold:
             dist, upd, cursor, alive = hp_sub_relax(
-                g, dist, sub, cursor, cap=sub.shape[0], mdt=mdt, op=op)
+                g, dist, sub, cursor, cap=sub.shape[0], mdt=mdt, op=op,
+                backend=backend)
             acc_mask = acc_mask | upd
             live = int(jnp.sum(alive))
             subiters += 1
@@ -603,7 +668,8 @@ class HierarchicalProcessing(StrategyBase):
             total = int(np.maximum(rem, 0).sum())
             if total > 0:
                 dist, upd = wd_relax(g, dist, sub, cursor,
-                                     cap_work=bucket(total), op=op)
+                                     cap_work=bucket(total), op=op,
+                                     backend=backend)
                 acc_mask = acc_mask | upd
             subiters += 1
         stats.sub_iterations = subiters
@@ -678,6 +744,10 @@ class AdaptiveStrategy(StrategyBase):
     between iterations (the property arXiv:1911.09135 exploits).
     """
     name = "AD"
+    # no SHARDABLE (the selector consumes global frontier statistics —
+    # docs/sharding.md) but the three delegate kernels all take the
+    # pallas backend, so AD composes with it transparently
+    capabilities = frozenset({FRONTIER_INIT, PALLAS_BACKEND})
 
     def __init__(self, small_frontier: int = 512,
                  imbalance_threshold: float = 4.0,
@@ -708,7 +778,8 @@ class AdaptiveStrategy(StrategyBase):
         return graph
 
     def iterate(self, g, dist, updated_mask, count, *,
-                op: EdgeOp = operators.shortest_path, record_degrees=False):
+                op: EdgeOp = operators.shortest_path, record_degrees=False,
+                backend: str = "xla"):
         # host-stepped: the mask sync below is the price of host-side
         # statistics.  The fused AD (repro.core.fused._ad_step) computes
         # the same statistics on device — mean/imbalance deliberately in
@@ -730,7 +801,7 @@ class AdaptiveStrategy(StrategyBase):
         extra = {"edge_total": degree_sum} if choice == "WD" else {}
         dist, new_mask, stats = self._kernels[choice].iterate(
             g, dist, updated_mask, count, op=op,
-            record_degrees=record_degrees, **extra)
+            record_degrees=record_degrees, backend=backend, **extra)
         stats.kernel = choice
         if stats.edges_processed == 0:
             stats.edges_processed = degree_sum

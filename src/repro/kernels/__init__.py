@@ -2,9 +2,13 @@
 # oracle in ref.py and a jit'd wrapper in ops.py.  Validated in
 # interpret mode on CPU; BlockSpecs are written for TPU VMEM tiling.
 #
+#   relax           - the backend="pallas" relax layer: fused gather +
+#                     message + activation + scatter-combine in VMEM,
+#                     incl. the merge-path-fused WD kernel
+#                     (docs/backends.md)
 #   find_offsets    - the paper's WD offset-search kernel (merge-path rank
 #                     computation over the frontier prefix-sum)
 #   flash_attention - blocked online-softmax causal GQA attention
 #   ssd_chunk       - Mamba-2 SSD intra-chunk dual form (MXU matmuls)
-from repro.kernels import find_offsets, flash_attention, ssd_chunk  # noqa: F401
+from repro.kernels import find_offsets, flash_attention, relax, ssd_chunk  # noqa: F401
 from repro.kernels import ops, ref  # noqa: F401

@@ -50,6 +50,8 @@ def find_offsets(prefix: jax.Array, cap_work: int,
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     f = prefix.shape[0]
+    if f == 0:      # empty frontier: every work item ranks to slot 0,
+        return jnp.zeros((cap_work,), jnp.int32)  # like searchsorted
     f_pad = -(-f // PREFIX_CHUNK) * PREFIX_CHUNK
     big = jnp.iinfo(jnp.int32).max
     prefix_p = jnp.pad(prefix, (0, f_pad - f), constant_values=big)

@@ -1,0 +1,328 @@
+"""Pallas relax kernels: fused scatter-combine in VMEM (docs/backends.md).
+
+After PRs 1–4 every relax kernel was plain XLA gather/scatter — Pallas
+appeared only in the :mod:`repro.kernels.find_offsets` merge-path helper,
+which "A Programming Model for GPU Load Balancing" (arXiv:2301.04792)
+argues is exactly backwards: the *schedule* (BS/WD/HP work assignment)
+and the *per-edge apply* should be fused in one tiled kernel.  This
+module is that kernel layer — the ``backend="pallas"`` implementation of
+the relax hot path that the strategies and the fused engine dispatch
+into (see ``repro.core.strategies`` / ``repro.core.fused``).
+
+Two kernels, both parameterized over the :class:`repro.core.operators.EdgeOp`
+monoid (min/max/add):
+
+* :func:`relax_lanes` — **direct-mapped lanes**: each work item already
+  knows its ``(src, dst, w)`` triple (BS edge columns, HP's MDT tiles,
+  EP's edge worklist).  The kernel fuses the ``dist[src]`` gather, the
+  operator's ``message``, the activation test against ``dist[dst]`` and
+  the *segment-local scatter-combine* in VMEM.
+* :func:`wd_relax_lanes` — **merge-path fused**: work item *k* first
+  locates its (frontier slot, local edge) by ranking *k* against the
+  inclusive degree prefix sum — the ``find_offsets`` search — and then
+  relaxes that edge *in the same kernel*.  The rank (the old
+  ``node_idx`` array) never leaves VMEM: no materialized ``[cap_work]``
+  index array, no separate search dispatch.
+
+TPU mapping (see /opt notes + repro.kernels.find_offsets): dynamic
+per-lane gathers don't vectorize on the VPU, so every gather/scatter is
+a *broadcast compare* streamed over 128-wide chunks resident in VMEM:
+
+* gather   ``dist[src]``:  ``Σ_chunk Σ_n [src == n] · dist[n]``
+  (exactly-one-hot sum — pure VPU compare/select/add);
+* scatter-combine into the proposal:  for each 128-node output chunk,
+  fold ``where(dst == n  ∧  improves, cand, identity)`` over the tile's
+  lanes with the monoid's reduction.  The fold happens entirely in the
+  VMEM-resident output block, which Pallas revisits across grid steps
+  (constant ``index_map``) — one accumulator, many lane tiles.
+
+The kernels return a dense **proposal** array (the monoid fold of every
+improving candidate per destination, identity elsewhere) instead of
+mutating ``dist``: the caller applies it with one elementwise
+:func:`apply_proposal`.  Because the built-in monoids are associative
+and commutative on int32 (min/max idempotent; add wraps consistently),
+folding per-destination candidates in kernel tile order is
+**bit-identical** to the XLA path's ``dist.at[dst].min/max/add``
+scatter — the parity contract ``tests/test_backends.py`` enforces for
+every strategy × operator × mode.
+
+Every entry point takes ``interpret=`` (default: on for CPU backends),
+so CI exercises the same kernel code path the TPU runs compiled —
+the same recipe as :mod:`repro.kernels.find_offsets`.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import operators
+from repro.core.operators import EdgeOp
+
+TILE_R, TILE_C = 8, 128          # VPU vector registers
+TILE = TILE_R * TILE_C           # work items per grid step
+CHUNK = 128                      # table chunk streamed per compare pass
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-max(int(n), 1) // m) * m
+
+
+def _fold2(combine: str, a, b):
+    """Elementwise monoid fold (the dense combine of two proposals)."""
+    if combine == "min":
+        return jnp.minimum(a, b)
+    if combine == "max":
+        return jnp.maximum(a, b)
+    return a + b
+
+
+def _reduce_tile(combine: str, vals):
+    """Fold a [TILE_R, TILE_C, CHUNK] candidate block over its lane axes."""
+    if combine == "min":
+        return jnp.min(vals, axis=(0, 1))
+    if combine == "max":
+        return jnp.max(vals, axis=(0, 1))
+    return jnp.sum(vals, axis=(0, 1))
+
+
+def _ids3(base: int):
+    """[TILE_R, TILE_C, CHUNK] iota along the chunk axis, offset ``base``
+    (broadcasted_iota: TPU has no 1-D iota)."""
+    return base + jax.lax.broadcasted_iota(
+        jnp.int32, (TILE_R, TILE_C, CHUNK), 2)
+
+
+def _onehot_gather(table_ref, idx, length: int, dtype):
+    """``table[idx]`` per lane via broadcast compare-and-sum over CHUNKs.
+
+    ``idx`` must be clipped into ``[0, real_length)`` by the caller so
+    exactly one chunk entry matches per lane (padded tail entries have
+    ids >= real length and can never match)."""
+    out = jnp.zeros((TILE_R, TILE_C), dtype)
+    for c in range(length // CHUNK):
+        chunk = table_ref[c * CHUNK:(c + 1) * CHUNK]
+        sel = idx[:, :, None] == _ids3(c * CHUNK)
+        out = out + jnp.sum(
+            jnp.where(sel, chunk[None, None, :], jnp.zeros((), dtype)),
+            axis=-1)
+    return out
+
+
+def _combine_pass(dist_ref, prop_ref, upd_ref, cand, dst, valid, *,
+                  op: EdgeOp, n_pad: int):
+    """The fused scatter-combine: fold this tile's improving candidates
+    into the VMEM proposal/updated accumulators, one 128-node output
+    chunk at a time.  Returns the per-lane improve mask (int32 0/1)."""
+    ident = jnp.asarray(op.identity, op.dtype)
+    imp = jnp.zeros((TILE_R, TILE_C), jnp.int32)
+    for c in range(n_pad // CHUNK):
+        sl = slice(c * CHUNK, (c + 1) * CHUNK)
+        cur = dist_ref[sl]
+        hit = (dst[:, :, None] == _ids3(c * CHUNK)) & (valid[:, :, None] != 0)
+        ok = hit & op.improves(cand[:, :, None], cur[None, None, :])
+        vals = jnp.where(ok, cand[:, :, None], ident)
+        prop_ref[sl] = _fold2(op.combine, prop_ref[sl],
+                              _reduce_tile(op.combine, vals))
+        upd_ref[sl] = upd_ref[sl] | jnp.any(ok, axis=(0, 1)).astype(jnp.int32)
+        imp = imp | jnp.any(ok, axis=-1).astype(jnp.int32)
+    return imp
+
+
+def _init_accumulators(prop_ref, upd_ref, *, op: EdgeOp, n_pad: int):
+    """Zero the revisited output blocks on the first grid step."""
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        prop_ref[...] = jnp.full((n_pad,), op.identity, op.dtype)
+        upd_ref[...] = jnp.zeros((n_pad,), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# kernel 1: direct-mapped lanes (BS columns, HP tiles, EP worklists)
+# ---------------------------------------------------------------------------
+
+def _lanes_kernel(dist_ref, src_ref, dst_ref, w_ref, valid_ref,
+                  prop_ref, upd_ref, imp_ref, *, op: EdgeOp, n_pad: int):
+    src = src_ref[...]
+    dst = dst_ref[...]
+    w = w_ref[...]
+    valid = valid_ref[...]
+    _init_accumulators(prop_ref, upd_ref, op=op, n_pad=n_pad)
+    val_src = _onehot_gather(dist_ref, src, n_pad, op.dtype)
+    cand = op.message(val_src, w)
+    imp_ref[...] = _combine_pass(dist_ref, prop_ref, upd_ref, cand, dst,
+                                 valid, op=op, n_pad=n_pad)
+
+
+@partial(jax.jit, static_argnames=("op", "interpret"))
+def relax_lanes(dist, src, dst, w, valid, *,
+                op: EdgeOp = operators.shortest_path,
+                interpret: bool | None = None):
+    """One fused relax over ``L`` direct-mapped lanes.
+
+    ``dist [N]``; ``src``/``dst`` (pre-clipped to ``[0, N)``), ``w`` and
+    ``valid`` are per-lane ``[L]``.  Returns ``(proposal [N], updated
+    [N] bool, improve [L] bool)`` where ``proposal`` is the monoid fold
+    of every improving candidate per destination (identity elsewhere);
+    apply it with :func:`apply_proposal`."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = dist.shape[0]
+    L = src.shape[0]
+    n_pad = _round_up(n, CHUNK)
+    l_tiles = _round_up(L, TILE) // TILE
+    l_pad = l_tiles * TILE
+
+    dist_p = jnp.pad(dist, (0, n_pad - n), constant_values=op.identity)
+
+    def lanes(x, fill, dtype):
+        return (jnp.pad(x.astype(dtype), (0, l_pad - L),
+                        constant_values=fill)
+                .reshape(l_tiles * TILE_R, TILE_C))
+
+    src_p = lanes(src, 0, jnp.int32)
+    dst_p = lanes(dst, 0, jnp.int32)
+    w_p = lanes(w, 0, op.dtype)
+    valid_p = lanes(valid, 0, jnp.int32)
+
+    lane_spec = pl.BlockSpec((TILE_R, TILE_C), lambda i: (i, 0))
+    full = lambda m: pl.BlockSpec((m,), lambda i: (0,))
+    prop, upd, imp = pl.pallas_call(
+        partial(_lanes_kernel, op=op, n_pad=n_pad),
+        grid=(l_tiles,),
+        in_specs=[full(n_pad), lane_spec, lane_spec, lane_spec, lane_spec],
+        out_specs=[full(n_pad), full(n_pad), lane_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), op.dtype),
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((l_tiles * TILE_R, TILE_C), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dist_p, src_p, dst_p, w_p, valid_p)
+    return (prop[:n], upd[:n].astype(jnp.bool_),
+            imp.reshape(-1)[:L].astype(jnp.bool_))
+
+
+# ---------------------------------------------------------------------------
+# kernel 2: merge-path search fused with the relax (WD / HP tail)
+# ---------------------------------------------------------------------------
+
+def _wd_kernel(prefix_ref, excl_ref, start_ref, srcid_ref, col_ref, wt_ref,
+               dist_ref, prop_ref, upd_ref, imp_ref, *, op: EdgeOp,
+               n_pad: int, f_pad: int, e_pad: int, f_real: int,
+               e_real: int, has_wt: bool):
+    pid = pl.program_id(0)
+    base = pid * TILE
+    k = (base
+         + jax.lax.broadcasted_iota(jnp.int32, (TILE_R, TILE_C), 0) * TILE_C
+         + jax.lax.broadcasted_iota(jnp.int32, (TILE_R, TILE_C), 1))
+    _init_accumulators(prop_ref, upd_ref, op=op, n_pad=n_pad)
+
+    # merge-path search: rank(k) = #{prefix entries <= k}, streamed over
+    # 128-wide prefix chunks (same broadcast-compare as find_offsets) —
+    # the node_idx array stays in registers/VMEM, never materialized.
+    rank = jnp.zeros((TILE_R, TILE_C), jnp.int32)
+    for c in range(f_pad // CHUNK):
+        chunk = prefix_ref[c * CHUNK:(c + 1) * CHUNK]
+        rank = rank + jnp.sum(
+            (chunk[None, None, :] <= k[:, :, None]).astype(jnp.int32),
+            axis=-1)
+    i = jnp.minimum(rank, f_real - 1)
+
+    # slot tables: start offset, exclusive prefix, global source id
+    excl = _onehot_gather(excl_ref, i, f_pad, jnp.int32)
+    start = _onehot_gather(start_ref, i, f_pad, jnp.int32)
+    src = _onehot_gather(srcid_ref, i, f_pad, jnp.int32)
+
+    total = prefix_ref[f_real - 1]
+    eidx = jnp.clip(start + (k - excl), 0, e_real - 1)
+    valid = (k < total).astype(jnp.int32)
+
+    dst = _onehot_gather(col_ref, eidx, e_pad, jnp.int32)
+    if has_wt:
+        w = _onehot_gather(wt_ref, eidx, e_pad, op.dtype)
+    else:
+        w = jnp.ones((TILE_R, TILE_C), op.dtype)
+    val_src = _onehot_gather(dist_ref, src, n_pad, op.dtype)
+    cand = op.message(val_src, w)
+    imp_ref[...] = _combine_pass(dist_ref, prop_ref, upd_ref, cand, dst,
+                                 valid, op=op, n_pad=n_pad)
+
+
+@partial(jax.jit, static_argnames=("cap_work", "op", "interpret"))
+def wd_relax_lanes(dist, prefix, exclusive, start, src_ids, col, wt, *,
+                   cap_work: int, op: EdgeOp = operators.shortest_path,
+                   interpret: bool | None = None):
+    """Merge-path search + relax, fused: ``cap_work`` lanes rank
+    themselves against the inclusive ``prefix [F]`` (the frontier's
+    remaining-degree scan), read their edge through the per-slot
+    ``start``/``exclusive``/``src_ids`` tables and the CSR ``col``/``wt``
+    arrays, and scatter-combine in VMEM.  Returns ``(proposal [N],
+    updated [N] bool, improve [cap_work] bool)``."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = dist.shape[0]
+    f = prefix.shape[0]
+    e = col.shape[0]
+    n_pad = _round_up(n, CHUNK)
+    f_pad = _round_up(f, CHUNK)
+    e_pad = _round_up(e, CHUNK)
+    l_tiles = _round_up(cap_work, TILE) // TILE
+
+    big = jnp.iinfo(jnp.int32).max
+    dist_p = jnp.pad(dist, (0, n_pad - n), constant_values=op.identity)
+    prefix_p = jnp.pad(prefix.astype(jnp.int32), (0, f_pad - f),
+                       constant_values=big)
+    pad_f = lambda x: jnp.pad(x.astype(jnp.int32), (0, f_pad - f))
+    col_p = jnp.pad(col.astype(jnp.int32), (0, e_pad - e))
+    wt_p = (jnp.zeros((e_pad,), op.dtype) if wt is None
+            else jnp.pad(wt.astype(op.dtype), (0, e_pad - e)))
+
+    lane_spec = pl.BlockSpec((TILE_R, TILE_C), lambda i: (i, 0))
+    full = lambda m: pl.BlockSpec((m,), lambda i: (0,))
+    prop, upd, imp = pl.pallas_call(
+        partial(_wd_kernel, op=op, n_pad=n_pad, f_pad=f_pad, e_pad=e_pad,
+                f_real=f, e_real=e, has_wt=wt is not None),
+        grid=(l_tiles,),
+        in_specs=[full(f_pad), full(f_pad), full(f_pad), full(f_pad),
+                  full(e_pad), full(e_pad), full(n_pad)],
+        out_specs=[full(n_pad), full(n_pad), lane_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), op.dtype),
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((l_tiles * TILE_R, TILE_C), jnp.int32),
+        ],
+        interpret=interpret,
+    )(prefix_p, pad_f(exclusive), pad_f(start), pad_f(src_ids), col_p,
+      wt_p, dist_p)
+    return (prop[:n], upd[:n].astype(jnp.bool_),
+            imp.reshape(-1)[:cap_work].astype(jnp.bool_))
+
+
+# ---------------------------------------------------------------------------
+# applying a proposal: the drop-in for the XLA scatter
+# ---------------------------------------------------------------------------
+
+def apply_proposal(dist, proposal, op: EdgeOp):
+    """Fold a dense proposal into ``dist`` elementwise.  Exactly the XLA
+    path's ``op.scatter`` outcome: the proposal already carries the
+    identity for untouched destinations, and the monoid is associative,
+    so one elementwise combine reproduces the scatter bit-for-bit."""
+    return _fold2(op.combine, dist, proposal)
+
+
+def apply_relax(dist, updated, src, dst, w, valid, *,
+                op: EdgeOp = operators.shortest_path,
+                interpret: bool | None = None):
+    """Pallas drop-in for ``repro.core.strategies._apply_relax`` — same
+    signature, same returns ``(dist, updated, improve)``, same values
+    bit-for-bit; the gather+message+activation+scatter-combine runs in
+    one :func:`relax_lanes` kernel instead of separate XLA HLOs."""
+    src_c = jnp.clip(src, 0, dist.shape[0] - 1)
+    dst_c = jnp.clip(dst, 0, dist.shape[0] - 1)
+    prop, upd, imp = relax_lanes(dist, src_c, dst_c, w, valid, op=op,
+                                 interpret=interpret)
+    return apply_proposal(dist, prop, op), updated | upd, imp

@@ -129,6 +129,7 @@ def test_differential_stepped_fused_oracle(strategy, op, gi, source):
     assert fused.edges_relaxed == stepped.edges_relaxed
 
 
+@pytest.mark.multi_device
 @pytest.mark.parametrize("strategy,op,gi,source",
                          [c for c in CASES if c[0] in SHARDED_STRATEGIES])
 def test_differential_sharded(strategy, op, gi, source):
@@ -187,6 +188,7 @@ if HAVE_HYPOTHESIS:
         source = draw(st.integers(0, _HN - 1))
         return np.array(src), np.array(dst), np.array(wt, np.int32), source
 
+    @pytest.mark.slow
     @settings(max_examples=25, deadline=None)
     @given(case=edge_lists(), op=st.sampled_from(MONOTONE_OPS),
            strategy=st.sampled_from(["BS", "WD", "EP", "AD"]))
@@ -203,6 +205,8 @@ if HAVE_HYPOTHESIS:
         np.testing.assert_array_equal(fused.dist, stepped.dist)
         assert fused.iterations == stepped.iterations
 
+    @pytest.mark.slow
+    @pytest.mark.multi_device
     @settings(max_examples=10, deadline=None)
     @given(case=edge_lists(), strategy=st.sampled_from(SHARDED_STRATEGIES))
     def test_hypothesis_sharded_differential(case, strategy):

@@ -37,6 +37,162 @@ def test_find_offsets_degenerate_all_zero():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+# direct unit coverage against the searchsorted oracle (previously only
+# exercised indirectly through WD runs)
+
+@pytest.mark.parametrize("seed", range(8))
+def test_find_offsets_randomized_prefix_oracle(seed):
+    """Randomized monotone prefixes (with runs of zero-degree slots and
+    duplicate values — the searchsorted tie cases) vs the jnp oracle."""
+    rng = np.random.default_rng(seed)
+    f = int(rng.integers(1, 600))
+    deg = rng.integers(0, 12, f)
+    deg[rng.random(f) < 0.4] = 0            # force zero-work runs
+    prefix = jnp.asarray(np.cumsum(deg), jnp.int32)
+    cap = int(rng.integers(1, 2 * max(int(prefix[-1]), 1) + 64))
+    got = find_offsets(prefix, cap, interpret=True)
+    want = jnp.searchsorted(prefix, jnp.arange(cap, dtype=jnp.int32),
+                            side="right").astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_find_offsets_empty_frontier():
+    """A zero-length prefix (no frontier slots at all) must behave like
+    searchsorted on an empty array: every work item ranks to 0."""
+    prefix = jnp.zeros((0,), jnp.int32)
+    got = find_offsets(prefix, 64, interpret=True)
+    want = ref.find_offsets_ref(prefix, 64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.shape == (64,)
+
+
+@pytest.mark.parametrize("cap", [1, 2, 127, 128, 129, 1024, 1025])
+def test_find_offsets_cap_work_edges(cap):
+    """cap_work below/at/above the tile size and below the total work:
+    the result is always exactly the first cap_work oracle entries."""
+    deg = RNG.integers(0, 7, 200).astype(np.int32)
+    prefix = jnp.asarray(np.cumsum(deg), jnp.int32)
+    got = find_offsets(prefix, cap, interpret=True)
+    want = ref.find_offsets_ref(prefix, cap)
+    assert got.shape == (cap,)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.skipif(jax.default_backend() != "cpu",
+                    reason="interpret default only engages on CPU")
+def test_find_offsets_interpret_default_on_cpu():
+    """On the CPU backend the interpret default must engage (the CI code
+    path) and agree with an explicit interpret=True call."""
+    deg = RNG.integers(0, 5, 50).astype(np.int32)
+    prefix = jnp.asarray(np.cumsum(deg), jnp.int32)
+    auto = find_offsets(prefix, 256)
+    explicit = find_offsets(prefix, 256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(explicit))
+
+
+# ---------------------------------------------------------------------------
+# relax kernels — the fused scatter-combine backend (docs/backends.md)
+# ---------------------------------------------------------------------------
+
+def _random_lanes(rng, op, n, L):
+    from repro.core import operators
+    dist = rng.integers(0, 60, n).astype(np.int32)
+    if op.combine == "min":     # sprinkle "unreached" values
+        dist[rng.random(n) < 0.4] = op.identity
+    return (jnp.asarray(dist),
+            jnp.asarray(rng.integers(0, n, L), jnp.int32),
+            jnp.asarray(rng.integers(0, n, L), jnp.int32),
+            jnp.asarray(rng.integers(1, 9, L), jnp.int32),
+            jnp.asarray(rng.random(L) < 0.7))
+
+
+@pytest.mark.parametrize("opname", ["shortest_path", "min_label",
+                                    "widest_path", "reach_count"])
+@pytest.mark.parametrize("n,L", [(3, 2), (100, 500), (257, 2050)])
+def test_relax_lanes_matches_apply_relax(opname, n, L):
+    """The Pallas scatter-combine must be bit-identical to the XLA
+    ``_apply_relax`` gather/scatter for every built-in monoid, including
+    duplicate destinations, masked lanes and non-tile-aligned shapes."""
+    from repro.core import operators
+    from repro.core.strategies import _apply_relax
+    from repro.kernels import relax
+    import zlib
+    op = operators.OPERATORS[opname]
+    # stable per-case seed (hash() of strings is per-process randomized)
+    rng = np.random.default_rng(zlib.crc32(f"{opname}-{n}-{L}".encode()))
+    dist, src, dst, w, valid = _random_lanes(rng, op, n, L)
+    upd0 = jnp.zeros((n,), jnp.bool_)
+    d1, u1, i1 = _apply_relax(dist, upd0, src, dst, w, valid, op=op)
+    d2, u2, i2 = relax.apply_relax(dist, upd0, src, dst, w, valid, op=op,
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_relax_lanes_custom_update_predicate():
+    """Operators overriding ``update`` evaluate it per (lane, dst) pair
+    inside the kernel — same bit-exact contract as the defaults."""
+    import jax.numpy as jnp2
+    from repro.core import operators
+    from repro.core.strategies import _apply_relax
+    from repro.kernels import relax
+    slack = operators.EdgeOp(
+        name="slack_test", combine="min", identity=operators.INF,
+        source_value=0, message=lambda v, w: v + w,
+        update=lambda cand, cur: cand + 2 < cur)   # only "big" improvements
+    rng = np.random.default_rng(5)
+    dist, src, dst, w, valid = _random_lanes(rng, slack, 90, 400)
+    upd0 = jnp.zeros((90,), jnp.bool_)
+    d1, u1, i1 = _apply_relax(dist, upd0, src, dst, w, valid, op=slack)
+    d2, u2, i2 = relax.apply_relax(dist, upd0, src, dst, w, valid, op=slack,
+                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@pytest.mark.parametrize("weighted", [True, False])
+@pytest.mark.parametrize("cursor_offset", [0, 1])
+def test_wd_relax_lanes_fuses_search_and_relax(weighted, cursor_offset):
+    """The merge-path-fused kernel must equal the two-stage XLA pipeline
+    (searchsorted + gather + scatter) on a real CSR frontier, with and
+    without a cursor offset (the HP tail case)."""
+    from repro.core import operators
+    from repro.core.strategies import _apply_relax
+    from repro.kernels import relax
+    from repro.data import rmat_graph
+    g = rmat_graph(scale=7, edge_factor=5, weighted=weighted, seed=11)
+    op = operators.shortest_path
+    n, e = g.num_nodes, g.num_edges
+    rng = np.random.default_rng(3)
+    dist = jnp.asarray(rng.integers(0, 40, n), jnp.int32)
+    mask = jnp.asarray(rng.random(n) < 0.3)
+    cursor = jnp.full((n,), cursor_offset, jnp.int32)
+    deg = jnp.maximum(
+        jnp.where(mask, g.row_ptr[1:] - g.row_ptr[:-1] - cursor, 0), 0)
+    prefix = jnp.cumsum(deg)
+    exclusive = prefix - deg
+    # XLA oracle
+    k = jnp.arange(e, dtype=jnp.int32)
+    node = jnp.clip(jnp.searchsorted(prefix, k, side="right")
+                    .astype(jnp.int32), 0, n - 1)
+    eidx = jnp.clip(g.row_ptr[node] + cursor[node] + (k - exclusive[node]),
+                    0, e - 1)
+    w = g.wt[eidx] if weighted else jnp.ones((e,), jnp.int32)
+    upd0 = jnp.zeros((n,), jnp.bool_)
+    d1, u1, _ = _apply_relax(dist, upd0, node, g.col[eidx], w,
+                             k < prefix[-1], op=op)
+    # fused kernel
+    prop, upd, _ = relax.wd_relax_lanes(
+        dist, prefix, exclusive, g.row_ptr[:-1] + cursor,
+        jnp.arange(n, dtype=jnp.int32), g.col,
+        g.wt if weighted else None, cap_work=e, op=op, interpret=True)
+    d2 = relax.apply_proposal(dist, prop, op)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(u1), np.asarray(upd))
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

@@ -73,13 +73,19 @@ def results():
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
+@pytest.mark.multi_device
 def test_shard_map_dispatch_matches_oracle(results):
     assert results["err_sm"] < 1e-5
 
 
+@pytest.mark.slow
+@pytest.mark.multi_device
 def test_ep_global_dispatch_matches_oracle(results):
     assert results["err_ep"] < 1e-5
 
 
+@pytest.mark.slow
+@pytest.mark.multi_device
 def test_padded_indivisible_experts_match(results):
     assert results["err_pad"] < 1e-5

@@ -1,0 +1,149 @@
+"""Property-based tests for the ``repro.core.shard`` partitioner.
+
+The sharded engine's correctness rests on three partition invariants
+that previously were only exercised indirectly through whole-traversal
+parity runs:
+
+* **ownership**: the boundaries tile ``[0, N)`` exactly — every node is
+  owned by exactly one shard, for any shard count and either method;
+* **edge conservation**: owned-degree sums equal ``E`` exactly (the
+  basis of the once-per-edge MTEPS accounting);
+* **round-trip**: the padded per-shard local CSRs reassemble to the
+  global graph bit-for-bit (adjacency runs, weights, padded rows empty).
+
+A deterministic randomized sweep always runs; a hypothesis layer (same
+optional pattern as tests/test_differential.py) searches adversarially
+when hypothesis is installed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import shard
+from repro.core.graph import CSRGraph
+from repro.data import rmat_graph, road_grid_graph
+
+
+def _random_graph(rng):
+    """Small random graph: possibly weighted, possibly with isolated
+    nodes, hubs, self-loops and duplicate edges."""
+    n = int(rng.integers(1, 120))
+    m = int(rng.integers(0, 6 * n))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    if m and rng.random() < 0.5:           # degree skew: hub node
+        src[: m // 2] = int(rng.integers(0, n))
+    wt = rng.integers(1, 9, m) if rng.random() < 0.5 else None
+    return CSRGraph.from_edges(src, dst, wt, n)
+
+
+def check_partition_invariants(g, num_shards, method):
+    sharded, info = shard.partition(g, num_shards, method=method)
+    rp = np.asarray(g.row_ptr, np.int64)
+    col = np.asarray(g.col)
+    wt = None if g.wt is None else np.asarray(g.wt)
+    bounds = info.boundaries
+
+    # ownership: boundaries tile [0, N) — each node in exactly one shard
+    assert bounds.shape == (num_shards + 1,)
+    assert bounds[0] == 0 and bounds[-1] == g.num_nodes
+    assert (np.diff(bounds) >= 0).all()
+    assert info.nodes.sum() == g.num_nodes
+    owner_count = np.zeros(g.num_nodes, np.int64)
+    for s in range(num_shards):
+        owner_count[bounds[s]:bounds[s + 1]] += 1
+    assert (owner_count == 1).all()
+
+    # edge conservation: owned-degree sums equal E exactly
+    deg = rp[1:] - rp[:-1]
+    for s in range(num_shards):
+        assert info.edges[s] == deg[bounds[s]:bounds[s + 1]].sum()
+    assert info.edges.sum() == g.num_edges
+
+    # round-trip: padded local CSRs reassemble the global adjacency
+    row_ptr_s = np.asarray(sharded.row_ptr)
+    col_s = np.asarray(sharded.col)
+    wt_s = None if sharded.wt is None else np.asarray(sharded.wt)
+    assert (wt is None) == (wt_s is None)
+    for s in range(num_shards):
+        b0, b1 = int(bounds[s]), int(bounds[s + 1])
+        local = b1 - b0
+        assert int(sharded.num_local[s]) == local
+        assert int(sharded.node_base[s]) == b0
+        lrp = row_ptr_s[s]
+        assert lrp[0] == 0
+        # padded rows beyond the owned range must be empty runs
+        assert (lrp[local:] == lrp[local]).all()
+        for i in range(local):
+            gnode = b0 + i
+            run = col_s[s, lrp[i]:lrp[i + 1]]
+            np.testing.assert_array_equal(run, col[rp[gnode]:rp[gnode + 1]])
+            if wt is not None:
+                np.testing.assert_array_equal(
+                    wt_s[s, lrp[i]:lrp[i + 1]], wt[rp[gnode]:rp[gnode + 1]])
+
+    # halo bookkeeping: ghosts are exactly the non-owned referenced dsts
+    for s in range(num_shards):
+        b0, b1 = int(bounds[s]), int(bounds[s + 1])
+        dsts = col[rp[b0]:rp[b1]]
+        crossing = dsts[(dsts < b0) | (dsts >= b1)]
+        np.testing.assert_array_equal(info.ghosts[s], np.unique(crossing))
+        assert info.cut_edges[s] == crossing.size
+    return sharded, info
+
+
+# ---------------------------------------------------------------------------
+# deterministic randomized sweep (always runs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", shard.PARTITION_METHODS)
+@pytest.mark.parametrize("seed", range(12))
+def test_partition_invariants_random_graphs(method, seed):
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng)
+    num_shards = int(rng.integers(1, 9))
+    check_partition_invariants(g, num_shards, method)
+
+
+@pytest.mark.parametrize("method", shard.PARTITION_METHODS)
+@pytest.mark.parametrize("num_shards", [1, 2, 5, 8])
+def test_partition_invariants_paper_families(method, num_shards):
+    for g in (rmat_graph(scale=7, edge_factor=8, weighted=True, seed=3),
+              road_grid_graph(side=9, weighted=False, seed=3)):
+        check_partition_invariants(g, num_shards, method)
+
+
+def test_partition_degenerate_shapes():
+    # single node, no edges, more shards than nodes
+    empty = CSRGraph.from_edges(np.array([], np.int64),
+                                np.array([], np.int64), None, 1)
+    check_partition_invariants(empty, 4, "degree")
+    check_partition_invariants(empty, 4, "contiguous")
+    # every edge from one hub
+    hub = CSRGraph.from_edges(np.zeros(10, np.int64),
+                              np.arange(10, dtype=np.int64),
+                              np.arange(1, 11), 11)
+    for method in shard.PARTITION_METHODS:
+        check_partition_invariants(hub, 3, method)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis layer (optional, like tests/test_differential.py)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31 - 1),
+           num_shards=st.integers(1, 12),
+           method=st.sampled_from(shard.PARTITION_METHODS))
+    def test_hypothesis_partition_invariants(seed, num_shards, method):
+        rng = np.random.default_rng(seed)
+        g = _random_graph(rng)
+        check_partition_invariants(g, num_shards, method)

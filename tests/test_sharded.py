@@ -167,6 +167,8 @@ def parity():
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
+@pytest.mark.multi_device
 def test_sharded_bit_parity_matrix(parity):
     """Acceptance: 8-virtual-device sharded runs are bit-identical to the
     single-device paths for every SHARDABLE strategy × built-in op."""
@@ -175,6 +177,8 @@ def test_sharded_bit_parity_matrix(parity):
     assert parity["cases"] >= 23
 
 
+@pytest.mark.slow
+@pytest.mark.multi_device
 def test_sharded_edge_accounting_counts_each_edge_once(parity):
     """Regression: mteps' numerator under sharding must equal the
     single-device relaxed-edge total, not S copies of it."""
