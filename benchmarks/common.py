@@ -45,7 +45,9 @@ def get_graph(name: str, weighted: bool):
 def run_strategy(graph, strategy_name: str, *, source: int | None = None,
                  repeats: int = 2, record_degrees: bool = False,
                  mode: str = "stepped", op: str = "shortest_path",
-                 backend: str = "xla", **kwargs) -> engine.RunResult:
+                 backend: str = "xla", schedule: str = "bsp",
+                 delta: int | None = None,
+                 **kwargs) -> engine.RunResult:
     """Warm-up run (jit compile) + best-of-N timed runs.
 
     The warm-up run is never a best-of candidate (its timings carry
@@ -55,7 +57,9 @@ def run_strategy(graph, strategy_name: str, *, source: int | None = None,
 
     ``op`` selects the edge operator (docs/operators.md) — the relax
     semantics under the strategy's schedule; ``backend`` the relax
-    kernel lowering (docs/backends.md).
+    kernel lowering (docs/backends.md); ``schedule``/``delta`` the work
+    ordering — ``"delta"`` settles distance buckets in priority order
+    (docs/scheduling.md).
 
     Default source = highest-outdegree node (inside the giant component —
     Graph500 practice; node 0 of a label-permuted Kronecker graph may
@@ -69,7 +73,7 @@ def run_strategy(graph, strategy_name: str, *, source: int | None = None,
         strat = engine.make_strategy(strategy_name, **kwargs)
         res = engine.run(graph, source, strat,
                          record_degrees=record_degrees, mode=mode, op=op,
-                         backend=backend)
+                         backend=backend, schedule=schedule, delta=delta)
         if i == 0:
             continue                      # warm-up: compile time pollutes
         if best is None or res.traversal_seconds < best.traversal_seconds:

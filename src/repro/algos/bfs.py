@@ -27,21 +27,29 @@ def _unweighted(graph: CSRGraph) -> CSRGraph:
 def bfs(graph: CSRGraph, source: int = 0, strategy: str = "WD",
         record_degrees: bool = False, mode: str = "stepped",
         shards=None, partition: str = "degree", backend: str = "xla",
+        schedule: str = "bsp", delta=None, async_shards: bool = False,
         **strategy_kwargs) -> RunResult:
     """``mode="fused"`` runs the traversal as one device dispatch (see
     :mod:`repro.core.fused`); ``"stepped"`` keeps per-iteration stats;
     ``shards=S`` partitions the graph over S devices (fused mode,
     SHARDABLE strategies — docs/sharding.md); ``backend="pallas"`` swaps
-    the relax kernels for the fused Pallas lowering (docs/backends.md)."""
+    the relax kernels for the fused Pallas lowering (docs/backends.md);
+    ``schedule="delta"`` settles level buckets in priority order (all
+    unit weights are light, so buckets are Δ levels wide) and
+    ``async_shards=True`` relaxes the sharded halo-combine cadence
+    (docs/scheduling.md)."""
     strat = make_strategy(strategy, **strategy_kwargs)
     return run(_unweighted(graph), source, strat,
                record_degrees=record_degrees, mode=mode, shards=shards,
-               partition=partition, backend=backend)
+               partition=partition, backend=backend, schedule=schedule,
+               delta=delta, async_shards=async_shards)
 
 
 def bfs_batch(graph: CSRGraph, sources, mode: str = "stepped",
               shards=None, partition: str = "degree",
-              backend: str = "xla") -> BatchRunResult:
+              backend: str = "xla", schedule: str = "bsp",
+              delta=None) -> BatchRunResult:
     """Level-propagate from K sources concurrently (dist is ``[K, N]``)."""
     return run_batch(_unweighted(graph), sources, mode=mode, shards=shards,
-                     partition=partition, backend=backend)
+                     partition=partition, backend=backend,
+                     schedule=schedule, delta=delta)

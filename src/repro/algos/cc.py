@@ -36,9 +36,15 @@ def connected_components(graph, strategy: str = "WD",
                          max_iterations: int = 10000,
                          mode: str = "stepped",
                          shards=None, partition: str = "degree",
-                         backend: str = "xla",
+                         backend: str = "xla", schedule: str = "bsp",
+                         delta=None, async_shards: bool = False,
                          **strategy_kwargs) -> np.ndarray:
-    """Returns the min-node-id label of each node's (in-)component."""
+    """Returns the min-node-id label of each node's (in-)component.
+
+    ``schedule="delta"`` buckets by tentative label (min_label is not
+    weight-additive, so every edge is light — correct, though the win
+    over BSP is small) and ``async_shards=True`` lets shards propagate
+    labels ahead of the halo combines (docs/scheduling.md)."""
     strat = make_strategy(strategy, **strategy_kwargs)
 
     def every_node_its_own_label(n_alloc):
@@ -53,5 +59,6 @@ def connected_components(graph, strategy: str = "WD",
     labels, _, _ = fixed_point(
         graph, strat, every_node_its_own_label, op=operators.min_label,
         mode=mode, max_iterations=max_iterations, shards=shards,
-        partition=partition, backend=backend)
+        partition=partition, backend=backend, schedule=schedule,
+        delta=delta, async_shards=async_shards)
     return labels

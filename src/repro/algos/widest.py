@@ -27,17 +27,23 @@ from repro.core.graph import CSRGraph, INF
 def widest_path(graph: CSRGraph, source: int = 0, strategy: str = "WD",
                 record_degrees: bool = False, mode: str = "stepped",
                 shards=None, partition: str = "degree",
-                backend: str = "xla", **strategy_kwargs) -> RunResult:
+                backend: str = "xla", schedule: str = "bsp", delta=None,
+                async_shards: bool = False,
+                **strategy_kwargs) -> RunResult:
     """Max-min bottleneck width from ``source`` to every node.
 
     ``result.dist[v]`` is the largest width over all source→v paths
     (0 = unreachable, INF = the source itself).  ``mode="fused"`` runs
     the traversal as one device dispatch (see :mod:`repro.core.fused`);
-    ``backend="pallas"`` swaps the relax kernels (docs/backends.md)."""
+    ``backend="pallas"`` swaps the relax kernels (docs/backends.md);
+    ``schedule="delta"`` settles *widest* buckets first (the max monoid
+    reflects the rank, docs/scheduling.md) and ``async_shards=True``
+    relaxes the sharded halo-combine cadence."""
     strat = make_strategy(strategy, **strategy_kwargs)
     return run(graph, source, strat, op="widest_path",
                record_degrees=record_degrees, mode=mode, shards=shards,
-               partition=partition, backend=backend)
+               partition=partition, backend=backend, schedule=schedule,
+               delta=delta, async_shards=async_shards)
 
 
 def reference_widest(graph: CSRGraph, source: int) -> np.ndarray:

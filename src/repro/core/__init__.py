@@ -3,13 +3,16 @@
 # TPU/JAX array semantics.  See DESIGN.md §2 for the mapping.
 from repro.core.graph import CSRGraph, COOGraph, INF, graph_stats  # noqa: F401
 from repro.core.engine import (run, run_batch, fixed_point, make_strategy,  # noqa: F401
-                               RunResult, ready, reference_distances)
+                               RunResult, SCHEDULES, ready,
+                               reference_distances)
 from repro.core.operators import (EdgeOp, OPERATORS, register_operator,  # noqa: F401
                                   shortest_path, min_label, widest_path,
                                   reach_count)
 from repro.core.strategies import (STRATEGIES, BACKENDS, FRONTIER_INIT,  # noqa: F401
-                                   PALLAS_BACKEND, SHARDABLE, register,
+                                   PALLAS_BACKEND, PRIORITY_SCHEDULE,
+                                   SHARDABLE, register,
                                    strategy_capabilities)
+from repro.core.priority import DeltaPlan, auto_delta, plan_delta  # noqa: F401
 from repro.core.multi_source import BatchRunResult  # noqa: F401
 from repro.core.node_split import find_mdt, split_graph  # noqa: F401
 from repro.core.shard import (ShardedCSRGraph, ShardInfo, partition,  # noqa: F401

@@ -34,12 +34,19 @@ import numpy as np
 
 from repro.core import fused as _fused
 from repro.core import operators
+from repro.core import priority as _priority
 from repro.core import shard as _shard
 from repro.core.graph import CSRGraph, INF
 from repro.core.strategies import (
     BACKENDS, EdgeBased, FRONTIER_INIT, IterStats, NodeSplitting,
-    PALLAS_BACKEND, SHARDABLE, StrategyBase, STRATEGIES, make_strategy,
-    register, strategy_capabilities)
+    PALLAS_BACKEND, PRIORITY_SCHEDULE, SHARDABLE, StrategyBase, STRATEGIES,
+    make_strategy, register, strategy_capabilities)
+
+#: work-ordering schedules engine.run/fixed_point/run_batch accept:
+#: "bsp" relaxes the whole frontier every iteration (bulk-synchronous,
+#: the default and the paper's framing); "delta" settles distance
+#: buckets in priority order (repro.core.priority, docs/scheduling.md)
+SCHEDULES = ("bsp", "delta")
 
 
 @dataclasses.dataclass
@@ -65,6 +72,27 @@ class RunResult:
     #: psum-folded once), so :attr:`mteps` needs no per-shard correction
     #: and stays directly comparable to single-device figures.
     shards: int = 1
+    #: work ordering of the run: "bsp" iterations or "delta" bucket
+    #: epochs (docs/scheduling.md).  ``iterations`` counts the schedule's
+    #: own outer unit — frontier iterations for BSP, bucket epochs for
+    #: delta, halo-combine epochs for async shards — and that unit is
+    #: what ``max_iterations`` caps.
+    schedule: str = "bsp"
+    #: bucket width of a delta run (None for BSP)
+    delta: Optional[int] = None
+    #: relax rounds — the finer-grained unit comparable ACROSS schedules
+    #: (a BSP iteration is one round; a delta epoch spends one round per
+    #: light-closure pass plus one per non-empty heavy pass; an async
+    #: epoch's rounds follow the deepest shard's local loop).  Filled
+    #: with ``iterations`` when the schedule has no finer unit.
+    relax_rounds: Optional[int] = None
+    #: True when shards ran ahead asynchronously between halo combines
+    #: (engine.run(..., async_shards=True) — docs/scheduling.md)
+    async_shards: bool = False
+
+    def __post_init__(self):
+        if self.relax_rounds is None:
+            self.relax_rounds = self.iterations
 
     @property
     def traversal_seconds(self) -> float:
@@ -143,11 +171,67 @@ def _check_backend(strategy: Optional[StrategyBase], backend: str,
             f"lowering — use backend='xla' (docs/backends.md)")
 
 
+def _check_schedule(strategy: Optional[StrategyBase], schedule: str,
+                    delta: Optional[int], op, shards: Optional[int],
+                    async_shards: bool) -> None:
+    """Validate the work-ordering knobs (shared by run/fixed_point).
+
+    ``op`` must already be resolved.  The rules (docs/scheduling.md):
+    delta-stepping needs a strategy with delta-phase lowerings
+    (:data:`PRIORITY_SCHEDULE`), an idempotent operator (reordering
+    changes non-idempotent fixed points) and a single device (bucket
+    membership reads the global value array); async shards need sharded
+    execution to exist at all, an idempotent operator (stale reads are
+    only safe for monotone monoids) and the BSP schedule."""
+    if schedule not in SCHEDULES:
+        raise ValueError(
+            f"schedule must be one of {SCHEDULES}, got {schedule!r}")
+    if delta is not None and schedule != "delta":
+        raise ValueError(
+            f"delta= sets the bucket width of schedule='delta'; it has no "
+            f"meaning under schedule={schedule!r}")
+    if schedule == "delta":
+        if strategy is not None and (
+                PRIORITY_SCHEDULE not in strategy.capabilities):
+            raise ValueError(
+                f"strategy {strategy.name!r} does not declare the "
+                f"{PRIORITY_SCHEDULE!r} capability; delta-stepping is "
+                f"gated on the node-centric strategies (EP's edge "
+                f"worklist has no per-node value to bucket by — "
+                f"docs/scheduling.md)")
+        if not op.idempotent:
+            raise ValueError(
+                f"schedule='delta' reorders relaxations; operator "
+                f"{op.name!r} (combine={op.combine!r}) is not idempotent, "
+                f"so its fixed point depends on relax order — use "
+                f"schedule='bsp' (docs/scheduling.md)")
+        if shards is not None:
+            raise ValueError(
+                "schedule='delta' is single-device (bucket selection "
+                "reads the global value array); combine it with "
+                "async_shards=False, shards=None — or use the BSP "
+                "schedule for sharded runs (docs/scheduling.md)")
+    if async_shards:
+        if shards is None:
+            raise ValueError(
+                "async_shards=True relaxes the halo-combine cadence of "
+                "SHARDED execution; pass shards= (and mode='fused') — "
+                "docs/scheduling.md")
+        if not op.idempotent:
+            raise ValueError(
+                f"async_shards=True lets shards relax against stale "
+                f"ghost values, which is only safe for idempotent "
+                f"monotone monoids; operator {op.name!r} has "
+                f"combine={op.combine!r} (docs/scheduling.md)")
+
+
 def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         max_iterations: int = 100000, record_degrees: bool = False,
         mode: str = "stepped", op="shortest_path",
         shards: Optional[int] = None,
-        partition: str = "degree", backend: str = "xla") -> RunResult:
+        partition: str = "degree", backend: str = "xla",
+        schedule: str = "bsp", delta: Optional[int] = None,
+        async_shards: bool = False) -> RunResult:
     """Fixed-point driver.  With the default ``shortest_path`` operator,
     ``graph.wt is None`` ⇒ BFS levels, else SSSP distances; any other
     :class:`repro.core.operators.EdgeOp` (or registered name) swaps the
@@ -174,7 +258,19 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
     dispatches every relax through the fused scatter-combine kernels of
     :mod:`repro.kernels.relax` instead of XLA gather/scatter —
     bit-identical dist/iterations/edges in both modes
-    (docs/backends.md)."""
+    (docs/backends.md).
+
+    ``schedule="delta"`` (strategies declaring
+    :data:`repro.core.strategies.PRIORITY_SCHEDULE`; idempotent
+    operators; single-device) orders relaxations by distance bucket —
+    delta-stepping, :mod:`repro.core.priority`.  ``delta=`` overrides
+    the auto-tuned bucket width; ``iterations`` then counts bucket
+    epochs (what ``max_iterations`` caps) and ``relax_rounds`` the
+    BSP-comparable relax count.  ``async_shards=True`` (with
+    ``shards=``) lets every shard relax its local frontier to a local
+    fixed point between halo combines instead of combining every chunk
+    — same final values for idempotent operators, fewer collectives;
+    ``iterations`` then counts combine epochs (docs/scheduling.md)."""
     if mode not in ("stepped", "fused"):
         raise ValueError(
             f"mode must be 'stepped' or 'fused', got {mode!r}")
@@ -182,9 +278,14 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         raise ValueError(
             "record_degrees collects per-iteration host-side stats; "
             "use mode='stepped'")
+    if record_degrees and schedule != "bsp":
+        raise ValueError(
+            "record_degrees reports per-BSP-iteration frontier degrees; "
+            "it has no bucket-epoch equivalent — use schedule='bsp'")
+    op = operators.resolve(op)
     _check_sharding(strategy, mode, shards)
     _check_backend(strategy, backend, shards)
-    op = operators.resolve(op)
+    _check_schedule(strategy, schedule, delta, op, shards, async_shards)
     if graph.num_edges == 0:        # degenerate: nothing to relax
         dist = np.full(graph.num_nodes, op.identity,
                        np.dtype(op.dtype))
@@ -194,15 +295,22 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
                          overhead_seconds=0.0, edges_relaxed=0,
                          iter_stats=[], strategy=strategy.name,
                          state_bytes=0, mode=mode, shards=shards or 1,
-                         backend=backend)
+                         backend=backend, schedule=schedule, delta=delta,
+                         async_shards=async_shards)
     t0 = time.perf_counter()
     state = strategy.setup(graph)
     splan = None
+    dplan = None
     if shards is not None:
         # partitioning is one-off host preprocessing, booked as setup
         # like the NS morph / EP COO conversion
         splan = _shard.plan_shards(strategy, state, graph, shards,
                                    method=partition)
+    if schedule == "delta":
+        # the light/heavy edge split is host preprocessing too
+        dplan = _priority.plan_delta(strategy, state, graph, op=op,
+                                     delta=delta)
+        delta = dplan.delta          # surface the auto-tuned width
     _ready(jax.tree_util.tree_leaves(state))
     setup_s = time.perf_counter() - t0
 
@@ -216,10 +324,16 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
 
     if mode == "fused":
         mask = jnp.zeros((n_alloc,), jnp.bool_).at[source].set(True)
+        rounds = None
         t_start = time.perf_counter()
         if splan is not None:
-            dist, iterations, edges = _shard.run_fixed_point(
-                splan, dist, mask, op=op, max_iterations=max_iterations)
+            dist, iterations, edges, rounds = _shard.run_fixed_point(
+                splan, dist, mask, op=op, max_iterations=max_iterations,
+                async_mode=async_shards)
+        elif dplan is not None:
+            dist, iterations, rounds, edges = _priority.run_fixed_point(
+                dplan, dist, mask, op=op, max_iterations=max_iterations,
+                backend=backend)
         else:
             dist, iterations, edges = _fused.run_fixed_point(
                 graph, state, strategy, dist, mask, op=op,
@@ -230,6 +344,8 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         state_bytes = strategy.state_bytes(state)
         if splan is not None:
             state_bytes += splan.sharded.device_bytes()
+        if dplan is not None:
+            state_bytes += dplan.device_bytes()
         # one dispatch: the kernel/overhead split collapses — the whole
         # traversal is kernel time, setup is the only host-side overhead
         return RunResult(
@@ -238,11 +354,13 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
             kernel_seconds=total_s, overhead_seconds=setup_s,
             edges_relaxed=edges, iter_stats=[], strategy=strategy.name,
             state_bytes=state_bytes, mode="fused", shards=shards or 1,
-            backend=backend)
+            backend=backend, schedule=schedule, delta=delta,
+            relax_rounds=rounds, async_shards=async_shards)
 
     iter_stats: list[IterStats] = []
     kernel_s = 0.0
     edges = 0
+    rounds = None
     t_start = time.perf_counter()
 
     # only forward backend= when it deviates from the default: a
@@ -252,7 +370,28 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
     # rejected it for backend="pallas"
     extra = {} if backend == "xla" else {"backend": backend}
 
-    if isinstance(strategy, EdgeBased):
+    if dplan is not None:
+        # stepped delta: one jitted bucket epoch per dispatch; the host
+        # syncs the frontier count between epochs (the delta analogue of
+        # the per-iteration stepped loop) and records which bucket each
+        # epoch settled — the invariant tests read it back
+        mask = jnp.zeros((n_alloc,), jnp.bool_).at[source].set(True)
+        count, it, rounds = 1, 0, 0
+        while count > 0 and it < max_iterations:
+            tk = time.perf_counter()
+            dist, mask, b, r, e = _priority.step_epoch(
+                dplan, dist, mask, op=op, backend=backend)
+            ready(dist)
+            kernel_s += time.perf_counter() - tk
+            edges += e
+            rounds += r
+            iter_stats.append(IterStats(
+                frontier_size=int(count), edges_processed=int(e),
+                sub_iterations=int(r), bucket=int(b),
+                kernel=f"delta:{dplan.kernel}"))
+            count = int(jnp.sum(mask))
+            it += 1
+    elif isinstance(strategy, EdgeBased):
         wl, count = strategy.initial_worklist(state, source)
         it = 0
         while count > 0 and it < max_iterations:
@@ -285,6 +424,9 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
     total_s = time.perf_counter() - t_start
     if isinstance(strategy, NodeSplitting):
         dist = strategy.split_info.extract_original(dist)
+    state_bytes = strategy.state_bytes(state)
+    if dplan is not None:
+        state_bytes += dplan.device_bytes()
     return RunResult(
         dist=np.asarray(dist), iterations=len(iter_stats),
         total_seconds=total_s + setup_s, setup_seconds=setup_s,
@@ -292,15 +434,18 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         overhead_seconds=max(total_s - kernel_s, 0.0) + setup_s,
         edges_relaxed=int(edges), iter_stats=iter_stats,
         strategy=strategy.name,
-        state_bytes=strategy.state_bytes(state), mode="stepped",
-        backend=backend)
+        state_bytes=state_bytes, mode="stepped",
+        backend=backend, schedule=schedule, delta=delta,
+        relax_rounds=rounds)
 
 
 def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
                 op="shortest_path", mode: str = "stepped",
                 max_iterations: int = 100000,
                 shards: Optional[int] = None,
-                partition: str = "degree", backend: str = "xla"):
+                partition: str = "degree", backend: str = "xla",
+                schedule: str = "bsp", delta: Optional[int] = None,
+                async_shards: bool = False):
     """Run a strategy to its fixed point from a caller-supplied seeding.
 
     The escape hatch under :func:`run` for algorithms whose initial state
@@ -316,9 +461,17 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
     frontier).  ``shards=S`` runs the fused kernels per-shard under
     ``shard_map`` (fused mode + SHARDABLE strategies only — see
     :func:`run` and docs/sharding.md); ``backend="pallas"`` swaps the
-    relax lowering (see :func:`run` and docs/backends.md).  Returns
+    relax lowering (see :func:`run` and docs/backends.md);
+    ``schedule="delta"`` / ``async_shards=True`` swap the work ordering
+    (see :func:`run` and docs/scheduling.md).  Returns
     ``(values, iterations, edges_relaxed)`` with ``values`` a host array
-    on the *original* node allocation."""
+    on the *original* node allocation.
+
+    ``max_iterations`` caps the schedule's own outer unit — BSP frontier
+    iterations, delta bucket epochs, async combine epochs — identically
+    in stepped and fused mode: a delta run capped at K stops after K
+    epochs whether the epochs were host-stepped or fused
+    (docs/scheduling.md pins this contract)."""
     if mode not in ("stepped", "fused"):
         raise ValueError(
             f"mode must be 'stepped' or 'fused', got {mode!r}")
@@ -327,9 +480,10 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
             f"strategy {strategy.name!r} does not declare the "
             f"{FRONTIER_INIT!r} capability; seeding an arbitrary frontier "
             f"needs a node strategy")
+    op = operators.resolve(op)
     _check_sharding(strategy, mode, shards)
     _check_backend(strategy, backend, shards)
-    op = operators.resolve(op)
+    _check_schedule(strategy, schedule, delta, op, shards, async_shards)
     state = strategy.setup(graph)
     if isinstance(strategy, NodeSplitting):
         n_alloc = strategy.split_info.graph.num_nodes
@@ -340,8 +494,25 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
     if shards is not None:
         splan = _shard.plan_shards(strategy, state, graph, shards,
                                    method=partition)
-        dist, it, edges = _shard.run_fixed_point(
-            splan, dist, mask, op=op, max_iterations=max_iterations)
+        dist, it, edges, _rounds = _shard.run_fixed_point(
+            splan, dist, mask, op=op, max_iterations=max_iterations,
+            async_mode=async_shards)
+    elif schedule == "delta":
+        dplan = _priority.plan_delta(strategy, state, graph, op=op,
+                                     delta=delta)
+        if mode == "fused":
+            dist, it, _rounds, edges = _priority.run_fixed_point(
+                dplan, dist, mask, op=op, max_iterations=max_iterations,
+                backend=backend)
+        else:
+            count, it, edges = int(jnp.sum(mask)), 0, 0
+            while count > 0 and it < max_iterations:
+                dist, mask, _b, _r, e = _priority.step_epoch(
+                    dplan, dist, mask, op=op, backend=backend)
+                ready(dist)
+                edges += e
+                count = int(jnp.sum(mask))
+                it += 1
     elif mode == "fused":
         dist, it, edges = _fused.run_fixed_point(
             graph, state, strategy, dist, mask, op=op,
@@ -366,7 +537,8 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
 def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
               mode: str = "stepped", op="shortest_path",
               shards: Optional[int] = None, partition: str = "degree",
-              backend: str = "xla"):
+              backend: str = "xla", schedule: str = "bsp",
+              delta: Optional[int] = None):
     """Run K sources concurrently against one graph (dist is ``[K, N]``).
 
     Thin wrapper over :func:`repro.core.multi_source.run_batch`; kept here
@@ -374,12 +546,14 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
     ``shards=S`` (fused mode only) shards the graph over S devices and
     vmaps the sharded WD step over the source axis (docs/sharding.md);
     ``backend="pallas"`` (single-device) swaps the relax lowering
-    (docs/backends.md)."""
+    (docs/backends.md); ``schedule="delta"`` (fused mode only) vmaps
+    whole per-row delta-stepping traversals (docs/scheduling.md)."""
     from repro.core import multi_source
     return multi_source.run_batch(graph, sources,
                                   max_iterations=max_iterations, mode=mode,
                                   op=op, shards=shards, partition=partition,
-                                  backend=backend)
+                                  backend=backend, schedule=schedule,
+                                  delta=delta)
 
 
 def reference_distances(graph: CSRGraph, source: int) -> np.ndarray:

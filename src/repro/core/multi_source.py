@@ -73,6 +73,18 @@ class BatchRunResult:
     shards: int = 1
     #: relax-kernel backend ("xla" or "pallas", docs/backends.md)
     backend: str = "xla"
+    #: work ordering: "bsp" iterations or "delta" bucket epochs; under
+    #: delta, ``iterations`` counts the SLOWEST row's epochs
+    #: (docs/scheduling.md)
+    schedule: str = "bsp"
+    #: bucket width of a delta batch (None for BSP)
+    delta: Optional[int] = None
+    #: slowest row's relax rounds (== iterations for BSP)
+    relax_rounds: Optional[int] = None
+
+    def __post_init__(self):
+        if self.relax_rounds is None:
+            self.relax_rounds = self.iterations
 
     @property
     def mteps(self) -> float:
@@ -137,7 +149,8 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
               mode: str = "stepped", op="shortest_path",
               shards: Optional[int] = None,
               partition: str = "degree",
-              backend: str = "xla") -> BatchRunResult:
+              backend: str = "xla", schedule: str = "bsp",
+              delta: Optional[int] = None) -> BatchRunResult:
     """Fixed-point driver over K sources at once.
 
     Semantics match K independent ``engine.run`` calls exactly (same
@@ -152,7 +165,11 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
     single-device batch (:mod:`repro.core.shard`, docs/sharding.md).
     ``backend="pallas"`` (single-device) routes every row's WD relax
     through the fused Pallas kernel — bit-identical again
-    (docs/backends.md).
+    (docs/backends.md).  ``schedule="delta"`` (fused mode, single
+    device, idempotent operators) runs every row as its own
+    delta-stepping traversal — rows settle different buckets in the
+    same joint dispatch, so ``iterations``/``relax_rounds`` report the
+    slowest row (:mod:`repro.core.priority`, docs/scheduling.md).
     """
     if mode not in ("stepped", "fused"):
         raise ValueError(
@@ -162,9 +179,15 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
             "sharded batches run the whole fixed point on-device under "
             "shard_map, i.e. the fused engine; pass mode='fused' "
             "(docs/sharding.md)")
-    from repro.core.engine import _check_backend
+    from repro.core.engine import _check_backend, _check_schedule
     _check_backend(None, backend, shards)
     op = operators.resolve(op)
+    _check_schedule(None, schedule, delta, op, shards, False)
+    if schedule == "delta" and mode != "fused":
+        raise ValueError(
+            "batched delta-stepping vmaps whole per-row traversals, a "
+            "fused-only construction; pass mode='fused' "
+            "(docs/scheduling.md)")
     np_dtype = np.dtype(op.dtype)
     sources = np.asarray(sources, np.int32)
     k = int(sources.shape[0])
@@ -174,17 +197,36 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
                               sources=sources, iterations=0,
                               total_seconds=0.0, edges_relaxed=0,
                               iter_stats=[], mode=mode, shards=shards or 1,
-                              backend=backend)
+                              backend=backend, schedule=schedule,
+                              delta=delta)
     if graph.num_edges == 0:
         dist = np.full((k, n), op.identity, np_dtype)
         dist[np.arange(k), sources] = op.seed(sources)
         return BatchRunResult(dist=dist, sources=sources, iterations=0,
                               total_seconds=0.0, edges_relaxed=0,
                               iter_stats=[], mode=mode, shards=shards or 1,
-                              backend=backend)
+                              backend=backend, schedule=schedule,
+                              delta=delta)
 
     t0 = time.perf_counter()
     dist_b, mask_b = init_batch(n, jnp.asarray(sources), op=op)
+
+    if schedule == "delta":
+        from repro.core import priority
+        from repro.core.strategies import make_strategy
+        wd = make_strategy("WD")
+        dplan = priority.plan_delta(wd, wd.setup(graph), graph, op=op,
+                                    delta=delta)
+        dist_b, iterations, rounds, edges = priority.run_batch_fixed_point(
+            dplan, dist_b, mask_b, op=op, max_iterations=max_iterations,
+            backend=backend)
+        total_s = time.perf_counter() - t0
+        return BatchRunResult(dist=np.asarray(dist_b), sources=sources,
+                              iterations=iterations, total_seconds=total_s,
+                              edges_relaxed=edges, iter_stats=[],
+                              mode="fused", backend=backend,
+                              schedule="delta", delta=dplan.delta,
+                              relax_rounds=rounds)
 
     if shards is not None:
         from repro.core import shard

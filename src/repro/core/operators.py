@@ -99,6 +99,16 @@ class EdgeOp:
     #: add, "candidate differs from the neutral element".
     update: Optional[Callable[[jax.Array, jax.Array], jax.Array]] = None
     dtype: Any = jnp.int32
+    #: delta-stepping hint: True asserts the message grows the priority
+    #: rank by at least the edge weight (``rank(message(v, w)) >=
+    #: rank(v) + w``, as ``v + w`` does for the min monoid).  Only then is
+    #: the light/heavy edge split sound — an edge with ``w > Δ`` provably
+    #: lands in a *later* bucket and may be deferred to the end of the
+    #: bucket epoch.  Operators that leave this False (label/bottleneck
+    #: propagation: rank grows, but not proportionally to ``w``) treat
+    #: every edge as light; delta-stepping still converges for monotone
+    #: monoids, it just cannot defer any work (docs/scheduling.md).
+    weight_additive: bool = False
 
     def __post_init__(self):
         if self.combine not in _COMBINES:
@@ -164,7 +174,7 @@ def _bottleneck_message(v, w):
 #: (``min`` distributes over ``+w`` — the paper's §II-B distributivity).
 shortest_path = EdgeOp(
     name="shortest_path", combine="min", identity=INF, source_value=0,
-    message=_sum_message)
+    message=_sum_message, weight_additive=True)
 
 #: min-label propagation: every active node pushes its label; the fixed
 #: point labels each node with the min id that reaches it.  Weights are

@@ -320,6 +320,13 @@ def _combine(op: EdgeOp, base, dist):
     return base + lax.psum(dist - base, AXIS)
 
 
+def _maybe_combine(op: EdgeOp, base, dist, sync: bool):
+    """Chunk-boundary combine in lockstep mode; a no-op in async mode,
+    where the shard keeps relaxing against its own (possibly stale)
+    replica and the fold happens once per outer epoch instead."""
+    return _combine(op, base, dist) if sync else dist
+
+
 def _any_across(updated):
     """OR a per-shard boolean mask across shards."""
     return lax.psum(updated.astype(jnp.int32), AXIS) > 0
@@ -342,10 +349,12 @@ def _local_frontier(sq: ShardedCSRGraph, mask):
 
 
 def _merge_path_local(sq: ShardedCSRGraph, dist, updated, gids, work,
-                      cursor=None, *, op: EdgeOp):
+                      cursor=None, *, op: EdgeOp, sync: bool = True):
     """One merge-path relax over this shard's ``Emax`` edge lanes +
     cross-shard combine — the sharded analogue of
-    ``fused._merge_path_relax`` (single chunk, so one combine)."""
+    ``fused._merge_path_relax`` (single chunk, so one combine).
+    ``sync=False`` (async mode) skips the combine: the relax commits to
+    the local replica only."""
     prefix = jnp.cumsum(work)
     exclusive = prefix - work
     total = prefix[-1]
@@ -360,17 +369,20 @@ def _merge_path_local(sq: ShardedCSRGraph, dist, updated, gids, work,
     dist, updated, _ = _apply_relax(
         dist, updated, gids[ni], sq.col[eidx], _local_weight(sq, eidx),
         valid, op=op)
-    return _combine(op, base, dist), updated, total
+    return _maybe_combine(op, base, dist, sync), updated, total
 
 
-def _bs_step(sq: ShardedCSRGraph, dist, mask, *, op: EdgeOp):
+def _bs_step(sq: ShardedCSRGraph, dist, mask, *, op: EdgeOp,
+             sync: bool = True):
     """Sharded dense BS: owned lanes walk their adjacency lists in
     lockstep columns; the column count is the *global* frontier max
     degree (``pmax``) so every shard folds the same chunk sequence, and
     the combine runs per column — the chunk boundary at which the
-    single-device ``_bs_step`` lets values chain."""
+    single-device ``_bs_step`` lets values chain.  ``sync=False`` walks
+    only the *local* max degree and never combines (async mode — no
+    collectives, shard-dependent trip counts allowed)."""
     gids, deg, _ = _local_frontier(sq, mask)
-    fmax = lax.pmax(jnp.max(deg), AXIS)
+    fmax = lax.pmax(jnp.max(deg), AXIS) if sync else jnp.max(deg)
     updated = jnp.zeros_like(mask)
 
     def cond(c):
@@ -384,35 +396,41 @@ def _bs_step(sq: ShardedCSRGraph, dist, mask, *, op: EdgeOp):
         dist, updated, _ = _apply_relax(
             dist, updated, gids, sq.col[eidx], _local_weight(sq, eidx),
             valid, op=op)
-        return d + 1, _combine(op, base, dist), updated
+        return d + 1, _maybe_combine(op, base, dist, sync), updated
 
     _, dist, updated = lax.while_loop(cond, body,
                                       (jnp.int32(0), dist, updated))
     return dist, updated, jnp.sum(deg)
 
 
-def _wd_step(sq: ShardedCSRGraph, dist, mask, *, op: EdgeOp):
+def _wd_step(sq: ShardedCSRGraph, dist, mask, *, op: EdgeOp,
+             sync: bool = True):
     """Sharded dense WD: one merge-path batch per shard, one combine per
     iteration (WD's single chunk)."""
     gids, deg, _ = _local_frontier(sq, mask)
     updated = jnp.zeros_like(mask)
-    dist, updated, _ = _merge_path_local(sq, dist, updated, gids, deg, op=op)
+    dist, updated, _ = _merge_path_local(sq, dist, updated, gids, deg, op=op,
+                                         sync=sync)
     return dist, updated, jnp.sum(deg)
 
 
 def _hp_step(sq: ShardedCSRGraph, dist, mask, *, mdt: int,
-             switch_threshold: int, op: EdgeOp):
+             switch_threshold: int, op: EdgeOp, sync: bool = True):
     """Sharded dense HP: the hybrid's branch predicate and the inner
     tile loop's trip count are computed from ``psum``-global counts so
     all shards stay in lockstep; the combine runs per MDT tile (HP's
-    sub-iteration chunk boundary) plus once for the WD tail."""
+    sub-iteration chunk boundary) plus once for the WD tail.
+    ``sync=False`` decides the branch and tile trip count from *local*
+    counts (async shards make local scheduling decisions) and never
+    combines."""
     gids, deg, member = _local_frontier(sq, mask)
-    count = lax.psum(jnp.sum(member.astype(jnp.int32)), AXIS)
+    local_count = jnp.sum(member.astype(jnp.int32))
+    count = lax.psum(local_count, AXIS) if sync else local_count
 
     def small(dist):
         updated = jnp.zeros_like(mask)
         dist, updated, _ = _merge_path_local(sq, dist, updated, gids, deg,
-                                             op=op)
+                                             op=op, sync=sync)
         return dist, updated
 
     def big(dist):
@@ -420,7 +438,8 @@ def _hp_step(sq: ShardedCSRGraph, dist, mask, *, mdt: int,
         j = jnp.arange(mdt, dtype=jnp.int32)[None, :]
 
         def live(cursor):
-            return lax.psum(jnp.sum((cursor < deg).astype(jnp.int32)), AXIS)
+            alive = jnp.sum((cursor < deg).astype(jnp.int32))
+            return lax.psum(alive, AXIS) if sync else alive
 
         def cond(c):
             i, cursor = c[0], c[1]
@@ -440,7 +459,8 @@ def _hp_step(sq: ShardedCSRGraph, dist, mask, *, mdt: int,
             dist, updated, _ = _apply_relax(
                 dist, updated, src, sq.col[eidx], _local_weight(sq, eidx),
                 valid.reshape(-1), op=op)
-            return i + 1, cursor + mdt, _combine(op, base, dist), updated
+            return (i + 1, cursor + mdt,
+                    _maybe_combine(op, base, dist, sync), updated)
 
         cursor0 = jnp.zeros((n_lanes,), jnp.int32)
         upd0 = jnp.zeros_like(mask)
@@ -449,20 +469,21 @@ def _hp_step(sq: ShardedCSRGraph, dist, mask, *, mdt: int,
 
         rem = jnp.maximum(deg - cursor, 0)
         dist, updated, _ = _merge_path_local(sq, dist, updated, gids, rem,
-                                             cursor, op=op)
+                                             cursor, op=op, sync=sync)
         return dist, updated
 
     dist, updated = lax.cond(count <= switch_threshold, small, big, dist)
     return dist, updated, jnp.sum(deg)
 
 
-def _ns_step(sq: ShardedCSRGraph, child_parent, dist, mask, *, op: EdgeOp):
+def _ns_step(sq: ShardedCSRGraph, child_parent, dist, mask, *, op: EdgeOp,
+             sync: bool = True):
     """Sharded dense NS: the parent→child mirror is a gather on the
     replicated arrays (identical on every shard, no combine needed),
     then sharded BS on the split graph."""
     dist = dist[child_parent]
     mask = mask | mask[child_parent]
-    return _bs_step(sq, dist, mask, op=op)
+    return _bs_step(sq, dist, mask, op=op, sync=sync)
 
 
 # ---------------------------------------------------------------------------
@@ -518,6 +539,101 @@ def _sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
         sg, aux, dist0, mask0)
 
 
+@partial(jax.jit, static_argnames=(
+    "kernel", "max_iterations", "mdt", "switch_threshold", "op", "mesh"))
+def _async_sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
+                               kernel: str, max_iterations: int,
+                               mdt: int = 1, switch_threshold: int = 1024,
+                               op: EdgeOp = operators.shortest_path,
+                               mesh=None):
+    """Asynchronous sharded traversal: shards run ahead between combines.
+
+    Each outer **epoch**, every shard drains its *owned* frontier to a
+    local fixed point — a collective-free inner ``while_loop`` whose trip
+    count is shard-dependent (the very thing the lockstep kernels must
+    avoid) — then the replicas are folded once with the operator's monoid
+    and nodes whose value the fold improved become the next frontier.
+    Stale ghost reads are safe because idempotent monotone monoids only
+    ever move values toward the fixed point (the engine gates
+    ``async_shards=True`` on ``op.idempotent``); the *final* values are
+    exact, while iteration counts and edge totals legitimately differ
+    from lockstep runs (docs/scheduling.md).
+
+    ``max_iterations`` caps epochs (= halo combines).  The outer-loop
+    condition derives from a carried ``psum``-global liveness bit, so
+    every shard agrees on the trip count and the per-epoch collectives
+    stay aligned.  Returns ``(dist, epochs, e_hi, e_lo, rounds)`` with
+    ``rounds`` the deepest shard's summed inner-loop trips."""
+    TRACE_COUNTS[f"shard-async:{kernel}"] += 1
+
+    def body(sg_blk, aux, dist, mask):
+        sq = _squeeze(sg_blk)
+        ids = jnp.arange(sq.num_nodes, dtype=jnp.int32)
+        owned = (ids >= sq.node_base) & (ids < sq.node_base + sq.num_local)
+
+        def eff(mask):
+            # NS: a live parent activates its children (the mirror the
+            # step kernel applies); children live on whichever shard owns
+            # their split id, so the activation must be visible to the
+            # inner-loop condition as well
+            return (mask | mask[aux]) if kernel == "NS" else mask
+
+        def local_step(dist, mask):
+            if kernel == "BS":
+                return _bs_step(sq, dist, mask, op=op, sync=False)
+            if kernel == "WD":
+                return _wd_step(sq, dist, mask, op=op, sync=False)
+            if kernel == "HP":
+                return _hp_step(sq, dist, mask, mdt=mdt,
+                                switch_threshold=switch_threshold, op=op,
+                                sync=False)
+            if kernel == "NS":
+                return _ns_step(sq, aux, dist, mask, op=op, sync=False)
+            raise ValueError(  # pragma: no cover - guarded by plan_shards
+                f"unknown sharded kernel {kernel!r}")
+
+        def inner_cond(c):
+            dist, mask = c[0], c[1]
+            return jnp.any(eff(mask) & owned)
+
+        def inner_body(c):
+            dist, mask, rounds, e_hi, e_lo = c
+            # the step relaxes every owned node in the (effective)
+            # frontier, so the next local frontier is exactly the nodes
+            # this round improved; non-owned activations have no local
+            # adjacency — they wait for their owner's next epoch
+            dist, upd, e = local_step(dist, eff(mask))
+            e_hi, e_lo = _limb_add(e_hi, e_lo, e)
+            return dist, upd, rounds + 1, e_hi, e_lo
+
+        def outer_cond(c):
+            it, live = c[0], c[1]
+            return live & (it < max_iterations)
+
+        def outer_body(c):
+            it, live, dist, mask, rounds, e_hi, e_lo = c
+            dist, mask, rounds, e_hi, e_lo = lax.while_loop(
+                inner_cond, inner_body, (dist, mask, rounds, e_hi, e_lo))
+            pre = dist
+            dist = _combine(op, pre, dist)       # the epoch's one fold
+            changed = op.improves(dist, pre)     # info from other shards
+            live = jnp.any(_any_across(changed)) # uniform across shards
+            return it + 1, live, dist, changed, rounds, e_hi, e_lo
+
+        carry = (jnp.int32(0), jnp.any(mask), dist, mask, jnp.int32(0),
+                 jnp.int32(0), jnp.int32(0))
+        it, _live, dist, _mask, rounds, e_hi, e_lo = lax.while_loop(
+            outer_cond, outer_body, carry)
+        return (dist, it, lax.psum(e_hi, AXIS), lax.psum(e_lo, AXIS),
+                lax.pmax(rounds, AXIS))
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(AXIS), P(None), P(None), P(None)),
+        out_specs=(P(None), P(None), P(None), P(None), P(None)))(
+        sg, aux, dist0, mask0)
+
+
 @dataclasses.dataclass
 class ShardedPlan:
     """How to run one strategy's traversal across shards."""
@@ -553,18 +669,33 @@ def plan_shards(strategy, state, graph: CSRGraph, num_shards: int, *,
 
 def run_fixed_point(splan: ShardedPlan, dist0, mask0, *,
                     op: EdgeOp = operators.shortest_path,
-                    max_iterations: int = 100000):
+                    max_iterations: int = 100000,
+                    async_mode: bool = False):
     """Run one planned sharded traversal (dispatch-counted like
     :func:`repro.core.fused.run_fixed_point`).  Returns
-    ``(dist, iterations, edges_relaxed)`` with ``dist`` on device."""
-    DISPATCH_COUNTS[f"shard:{splan.kernel}"] += 1
+    ``(dist, iterations, edges_relaxed, relax_rounds)`` with ``dist`` on
+    device.  Lockstep mode (the default) keeps the bit-parity contract
+    with the single-device paths and reports ``relax_rounds ==
+    iterations``; ``async_mode=True`` lets shards run ahead between halo
+    combines (:func:`_async_sharded_fixed_point`) — ``iterations`` then
+    counts combine epochs and ``relax_rounds`` the deepest shard's local
+    relax rounds."""
     aux = (jnp.zeros((1,), jnp.int32) if splan.aux is None else splan.aux)
-    dist, it, e_hi, e_lo = _sharded_fixed_point(
-        splan.sharded, aux, dist0, mask0, kernel=splan.kernel,
-        max_iterations=max_iterations, op=operators.resolve(op),
-        mesh=splan.mesh, **splan.static)
+    if async_mode:
+        DISPATCH_COUNTS[f"shard-async:{splan.kernel}"] += 1
+        dist, it, e_hi, e_lo, rounds = _async_sharded_fixed_point(
+            splan.sharded, aux, dist0, mask0, kernel=splan.kernel,
+            max_iterations=max_iterations, op=operators.resolve(op),
+            mesh=splan.mesh, **splan.static)
+    else:
+        DISPATCH_COUNTS[f"shard:{splan.kernel}"] += 1
+        dist, it, e_hi, e_lo = _sharded_fixed_point(
+            splan.sharded, aux, dist0, mask0, kernel=splan.kernel,
+            max_iterations=max_iterations, op=operators.resolve(op),
+            mesh=splan.mesh, **splan.static)
+        rounds = it
     jax.block_until_ready(dist)
-    return dist, int(it), int(e_hi) * _LIMB + int(e_lo)
+    return dist, int(it), int(e_hi) * _LIMB + int(e_lo), int(rounds)
 
 
 # ---------------------------------------------------------------------------

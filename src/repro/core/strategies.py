@@ -342,6 +342,10 @@ class IterStats:
     sub_iterations: int = 1
     frontier_degrees: Optional[np.ndarray] = None  # for balance analysis
     kernel: Optional[str] = None     # relax kernel used (AD records choices)
+    #: bucket index settled by a delta-stepping epoch (None for BSP
+    #: iterations) — strictly increasing over a run for monotone
+    #: operators, which the priority test harness asserts
+    bucket: Optional[int] = None
 
 
 #: capability: the strategy can start from an arbitrary dense
@@ -365,16 +369,24 @@ SHARDABLE = "shardable"
 #: kwarg must not (docs/backends.md).
 PALLAS_BACKEND = "pallas_backend"
 
+#: capability: the strategy's kernels have delta-stepping phase lowerings
+#: in :mod:`repro.core.priority`, so ``engine.run(..., schedule="delta")``
+#: may order its relaxations by distance bucket.  The five node-centric
+#: built-ins (BS/WD/NS/HP/AD) declare it; EP does not — its edge worklist
+#: has no per-node tentative value to bucket by (docs/scheduling.md).
+PRIORITY_SCHEDULE = "priority_schedule"
+
 #: capabilities a plain StrategyBase subclass declares unless it says
 #: otherwise at registration (or via a ``capabilities`` class attribute).
-#: Deliberately excludes :data:`SHARDABLE` and :data:`PALLAS_BACKEND`:
-#: a third-party strategy is single-device and XLA-only until it ships
-#: the corresponding lowerings and says so.
+#: Deliberately excludes :data:`SHARDABLE`, :data:`PALLAS_BACKEND` and
+#: :data:`PRIORITY_SCHEDULE`: a third-party strategy is single-device,
+#: XLA-only and BSP-only until it ships the corresponding lowerings and
+#: says so.
 DEFAULT_CAPABILITIES = frozenset({FRONTIER_INIT})
 
 #: what the four built-in shardable strategies declare
 SHARDED_CAPABILITIES = frozenset({FRONTIER_INIT, SHARDABLE,
-                                  PALLAS_BACKEND})
+                                  PALLAS_BACKEND, PRIORITY_SCHEDULE})
 
 
 class StrategyBase:
@@ -746,8 +758,10 @@ class AdaptiveStrategy(StrategyBase):
     name = "AD"
     # no SHARDABLE (the selector consumes global frontier statistics —
     # docs/sharding.md) but the three delegate kernels all take the
-    # pallas backend, so AD composes with it transparently
-    capabilities = frozenset({FRONTIER_INIT, PALLAS_BACKEND})
+    # pallas backend and all three have delta-stepping phase lowerings,
+    # so AD composes with both transparently
+    capabilities = frozenset({FRONTIER_INIT, PALLAS_BACKEND,
+                              PRIORITY_SCHEDULE})
 
     def __init__(self, small_frontier: int = 512,
                  imbalance_threshold: float = 4.0,

@@ -10,6 +10,14 @@ and dispatch to a per-capacity jitted specialization.  This keeps wall-clock
 work proportional to the live frontier (as on the GPU, where the launch
 configuration tracks the worklist size) while staying shape-static inside
 each call — and it bounds the number of compiled variants to O(log N).
+
+Priority (distance) buckets: :mod:`repro.core.priority` extends the same
+machinery from *capacity* buckets to *value* buckets — delta-stepping's
+``⌊rank/Δ⌋`` partition of the frontier by tentative value.  The rank /
+bucket-index / min-live-bucket helpers live here because they are
+worklist bookkeeping, not relax semantics: a priority bucket is just a
+worklist whose membership predicate reads the value array
+(docs/scheduling.md).
 """
 
 from __future__ import annotations
@@ -19,7 +27,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.graph import INF
+
 MIN_BUCKET = 256
+
+#: bucket index of an empty slot — compares above every real bucket
+#: (real indices are ≤ INF < int32 max), so ``min`` folds ignore it
+NO_BUCKET = jnp.iinfo(jnp.int32).max
 
 
 def bucket(n: int, minimum: int = MIN_BUCKET) -> int:
@@ -67,3 +81,28 @@ def run_fill(starts: jax.Array, lengths: jax.Array, total_hint: jax.Array,
     vals = starts[run_c] + local
     valid = k < jnp.minimum(total_hint, prefix[-1] if prefix.size else 0)
     return jnp.where(valid, vals, -1).astype(jnp.int32), valid
+
+
+# ---------------------------------------------------------------------------
+# Priority (value) buckets — delta-stepping support (repro.core.priority)
+# ---------------------------------------------------------------------------
+
+def bucket_rank(vals: jax.Array, *, descending: bool = False) -> jax.Array:
+    """Map tentative values to a non-negative *rank* where smaller rank means
+    "settle earlier".  ``min`` monoids (shortest_path, min_label) settle small
+    values first; ``max`` monoids (widest_path) settle large values first, so
+    their rank is the reflection ``INF - v``.  Values are clipped into
+    ``[0, INF]`` so identity sentinels rank last, never negative."""
+    v = jnp.clip(vals, 0, INF)
+    return (INF - v) if descending else v
+
+
+def bucket_index(vals: jax.Array, delta, *, descending: bool = False) -> jax.Array:
+    """Delta-stepping bucket of each value: ``⌊rank / Δ⌋``.  ``delta`` is a
+    traced int32 scalar (dynamic, so retuning Δ never recompiles)."""
+    return (bucket_rank(vals, descending=descending) // delta).astype(jnp.int32)
+
+
+def min_live_bucket(mask: jax.Array, bkt: jax.Array) -> jax.Array:
+    """Smallest bucket index with a live frontier node (NO_BUCKET if empty)."""
+    return jnp.min(jnp.where(mask, bkt, NO_BUCKET))
