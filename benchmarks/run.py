@@ -8,8 +8,8 @@ def main() -> None:
     from benchmarks import (fig7_sssp, fig8_bfs, fig9_tradeoffs, fig10_ns,
                             fig11_chunking, fig12_adaptive, fig13_fused,
                             fig14_operators, fig15_sharded, fig16_pallas,
-                            fig17_delta, table2_graphs, moe_balance,
-                            lm_step)
+                            fig17_delta, fig18_serving, table2_graphs,
+                            moe_balance, lm_step)
     modules = [
         ("table2_graphs", table2_graphs),
         ("fig7_sssp", fig7_sssp),
@@ -23,6 +23,7 @@ def main() -> None:
         ("fig15_sharded", fig15_sharded),
         ("fig16_pallas", fig16_pallas),
         ("fig17_delta", fig17_delta),
+        ("fig18_serving", fig18_serving),
         ("moe_balance", moe_balance),
         ("lm_step", lm_step),
     ]

@@ -1,100 +1,36 @@
-"""Graph-query serving demo: continuous batching over K engine slots.
+"""Graph-query serving demo: the production tier in ~40 lines.
 
-The serving analogue of ``examples/serve_lm.py``, but the requests are
-BFS/SSSP queries against one shared graph.  K slots advance together —
-one vmapped relax dispatch per iteration for the whole batch — and the
-moment a slot's frontier empties (its query converged) the result is
-harvested and the next pending query is admitted into that slot with
-``multi_source.refill_slot``, without disturbing the in-flight queries in
-the other slots.
-
-Execution-model note (docs/architecture.md): continuous batching is
-inherently host-STEPPED — harvesting converged slots and admitting new
-queries requires inspecting the mask between iterations, so this loop
-uses the per-iteration ``batched_wd_relax`` dispatch.  For a *fixed*
-batch with no mid-flight admission, ``engine.run_batch(...,
-mode="fused")`` runs all K queries to their fixed points in a single
-device dispatch instead.
+A thin driver over :mod:`repro.serve` (docs/serving.md): load a resident
+graph, optionally pin landmark sources, push an open-loop stream of
+BFS/SSSP queries with deadlines through the admission queue, and let the
+deadline-aware continuous batcher re-bucket K and dispatch fused
+``run_batch`` executables.  Every number printed at the end comes from
+``GraphServer.stats()`` — the same metric dict the tests and
+``benchmarks/fig18_serving.py`` consume.
 
     PYTHONPATH=src python examples/serve_graph_queries.py \
-        --queries 12 --slots 4 --graph rmat --algo sssp
+        --queries 12 --max-batch 4 --graph rmat --algo sssp
 """
 
 import argparse
-import time
 
 import numpy as np
-import jax
 
-from repro.core import multi_source
-from repro.core.graph import CSRGraph, INF
-from repro.core.worklist import bucket
 from repro.data import make_graph
-
-
-def serve(graph: CSRGraph, sources, num_slots: int):
-    """Continuous-batching loop.  Returns (completed records, edge total)."""
-    degrees = np.asarray(graph.degrees).astype(np.int64)
-    pending = list(int(s) for s in sources)
-    if not pending:
-        return [], 0
-    k = min(num_slots, len(pending))
-    admitted = [pending.pop(0) for _ in range(k)]
-    slot_query = list(range(k))                 # query id per slot
-    slot_iters = [0] * k
-    slot_t0 = [time.perf_counter()] * k
-    dist_b, mask_b = multi_source.init_batch(
-        graph.num_nodes, np.asarray(admitted, np.int32))
-    next_qid = k
-    done = []
-    edges = 0
-
-    while True:
-        mask_np = np.asarray(mask_b)
-        counts = mask_np.sum(axis=1)
-        # harvest converged slots, refill from the queue
-        for slot in range(k):
-            if slot_query[slot] is None or counts[slot] != 0:
-                continue
-            d = np.asarray(dist_b[slot])
-            reached = int((d < INF).sum())
-            done.append(dict(qid=slot_query[slot],
-                             source=int(admitted[slot]),
-                             reached=reached,
-                             iterations=slot_iters[slot],
-                             latency_s=time.perf_counter() - slot_t0[slot]))
-            if pending:
-                src = pending.pop(0)
-                admitted[slot] = src
-                slot_query[slot] = next_qid
-                slot_iters[slot] = 0
-                slot_t0[slot] = time.perf_counter()
-                next_qid += 1
-                dist_b, mask_b = multi_source.refill_slot(
-                    dist_b, mask_b, np.int32(slot), np.int32(src))
-            else:
-                slot_query[slot] = None
-        mask_np = np.asarray(mask_b)
-        counts = mask_np.sum(axis=1)
-        widest = int(counts.max())
-        if widest == 0:
-            break
-        totals = mask_np.astype(np.int64) @ degrees
-        dist_b, mask_b = multi_source.batched_wd_relax(
-            graph, dist_b, mask_b,
-            cap=bucket(widest), cap_work=bucket(int(totals.max())))
-        jax.block_until_ready(dist_b)
-        edges += int(totals.sum())
-        for slot in range(k):
-            if slot_query[slot] is not None:
-                slot_iters[slot] += 1
-    return done, edges
+from repro.serve import GraphServer, Request
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--deadline", type=float, default=30.0,
+                    help="per-request deadline, seconds from submit")
+    ap.add_argument("--landmarks", type=int, default=2,
+                    help="hot sources pinned in the distance cache")
+    ap.add_argument("--burst", type=int, default=4,
+                    help="arrivals per batcher turn (open-loop burstiness)")
     ap.add_argument("--graph", default="rmat",
                     help="name from repro.data.GRAPH_SUITE")
     ap.add_argument("--algo", choices=["sssp", "bfs"], default="sssp")
@@ -104,22 +40,46 @@ def main():
     g = make_graph(args.graph, weighted=(args.algo == "sssp"))
     rng = np.random.default_rng(args.seed)
     # draw sources from the high-degree end so queries land in the giant
-    # component (Graph500 practice)
+    # component (Graph500 practice); repeats exercise the distance cache
     order = np.argsort(np.asarray(g.degrees))[::-1]
-    sources = order[rng.integers(0, max(g.num_nodes // 10, 1),
-                                 size=args.queries)]
+    pool = order[: max(g.num_nodes // 10, 1)]
+    sources = rng.choice(pool, size=args.queries)
 
-    t0 = time.perf_counter()
-    done, edges = serve(g, sources, args.slots)
-    dt = time.perf_counter() - t0
+    srv = GraphServer(max_queue=args.max_queue, max_batch=args.max_batch)
+    srv.load_graph(args.graph, g)
+    if args.landmarks:
+        srv.warm(args.graph, pool[: args.landmarks])
 
-    for r in sorted(done, key=lambda r: r["qid"]):
-        print(f"query {r['qid']:3d}: source={r['source']:6d} "
-              f"reached={r['reached']:6d} iters={r['iterations']:3d} "
-              f"latency={r['latency_s'] * 1e3:7.1f}ms")
-    print(f"\n{len(done)} queries in {dt:.2f}s with {args.slots} slots: "
-          f"{len(done) / dt:.1f} queries/s, "
-          f"{edges / dt / 1e6:.2f} MTEPS aggregate")
+    done = []
+    for start in range(0, len(sources), args.burst):
+        for src in sources[start:start + args.burst]:   # arrival burst
+            resp = srv.submit(Request(
+                source=int(src), graph=args.graph,
+                deadline=srv.clock() + args.deadline))
+            if resp is not None:              # cache hit or reject
+                done.append(resp)
+        done.extend(srv.step())               # continuous batching
+    done.extend(srv.drain())
+
+    for r in done:
+        if r.ok:
+            reached = int((r.dist < np.iinfo(np.int32).max // 2).sum())
+            print(f"query {r.request.id:3d}: source={r.request.source:6d} "
+                  f"reached={reached:6d} lanes={r.batch_lanes} "
+                  f"{'cache-hit' if r.cached else 'traversed'} "
+                  f"latency={r.latency * 1e3:7.1f}ms")
+        else:
+            print(f"query {r.request.id:3d}: source={r.request.source:6d} "
+                  f"REJECTED ({r.reason})")
+
+    s = srv.stats()
+    print(f"\n{s['submitted']} submitted, {s.get('completed', 0)} served "
+          f"({s.get('result_cache_hits', 0)} cache hits), "
+          f"{s.get('rejected_total', 0)} rejected; "
+          f"{s.get('batches', 0)} batches at "
+          f"occupancy={s['batch_occupancy'] or 0:.2f}; "
+          f"p50={s['latency_p50'] * 1e3:.1f}ms "
+          f"p99={s['latency_p99'] * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -538,7 +538,7 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
               mode: str = "stepped", op="shortest_path",
               shards: Optional[int] = None, partition: str = "degree",
               backend: str = "xla", schedule: str = "bsp",
-              delta: Optional[int] = None):
+              delta: Optional[int] = None, pad_to: Optional[int] = None):
     """Run K sources concurrently against one graph (dist is ``[K, N]``).
 
     Thin wrapper over :func:`repro.core.multi_source.run_batch`; kept here
@@ -547,13 +547,15 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
     vmaps the sharded WD step over the source axis (docs/sharding.md);
     ``backend="pallas"`` (single-device) swaps the relax lowering
     (docs/backends.md); ``schedule="delta"`` (fused mode only) vmaps
-    whole per-row delta-stepping traversals (docs/scheduling.md)."""
+    whole per-row delta-stepping traversals (docs/scheduling.md);
+    ``pad_to=P`` K-buckets the batch onto a shared [P, N] executable
+    (docs/serving.md)."""
     from repro.core import multi_source
     return multi_source.run_batch(graph, sources,
                                   max_iterations=max_iterations, mode=mode,
                                   op=op, shards=shards, partition=partition,
                                   backend=backend, schedule=schedule,
-                                  delta=delta)
+                                  delta=delta, pad_to=pad_to)
 
 
 def reference_distances(graph: CSRGraph, source: int) -> np.ndarray:

@@ -81,6 +81,12 @@ class BatchRunResult:
     delta: Optional[int] = None
     #: slowest row's relax rounds (== iterations for BSP)
     relax_rounds: Optional[int] = None
+    #: trailing rows that are padding, not real queries (``pad_to=`` —
+    #: the serving tier's K-bucketing; ``dist[:K - pad_lanes]`` are the
+    #: requested rows).  ``edges_relaxed`` includes padded lanes' work
+    #: (they relax real edges), so occupancy accounting lives with the
+    #: caller that chose the bucket (repro.serve, docs/serving.md).
+    pad_lanes: int = 0
 
     def __post_init__(self):
         if self.relax_rounds is None:
@@ -150,7 +156,8 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
               shards: Optional[int] = None,
               partition: str = "degree",
               backend: str = "xla", schedule: str = "bsp",
-              delta: Optional[int] = None) -> BatchRunResult:
+              delta: Optional[int] = None,
+              pad_to: Optional[int] = None) -> BatchRunResult:
     """Fixed-point driver over K sources at once.
 
     Semantics match K independent ``engine.run`` calls exactly (same
@@ -170,6 +177,10 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
     delta-stepping traversal — rows settle different buckets in the
     same joint dispatch, so ``iterations``/``relax_rounds`` report the
     slowest row (:mod:`repro.core.priority`, docs/scheduling.md).
+    ``pad_to=P`` rounds the batch up to P lanes (duplicating the first
+    source) so differently-sized batches share one compiled [P, N]
+    executable — the serving tier's K-bucketing (docs/serving.md);
+    ``BatchRunResult.pad_lanes`` counts the synthetic trailing rows.
     """
     if mode not in ("stepped", "fused"):
         raise ValueError(
@@ -190,6 +201,22 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
             "(docs/scheduling.md)")
     np_dtype = np.dtype(op.dtype)
     sources = np.asarray(sources, np.int32)
+    pad_lanes = 0
+    if pad_to is not None:
+        # K-bucketing for the serving tier (repro.serve): round the batch
+        # up to a caller-chosen bucket so repeated batches of different
+        # sizes share one [pad_to, N] compiled executable.  Pad lanes
+        # re-run the first real source (node 0 on an empty batch) — they
+        # converge with the batch and the caller slices them off.
+        if pad_to < sources.shape[0]:
+            raise ValueError(
+                f"pad_to={pad_to} is smaller than the batch "
+                f"({sources.shape[0]} sources); pick a bucket >= K")
+        pad_lanes = pad_to - int(sources.shape[0])
+        if pad_lanes:
+            fill = sources[0] if sources.shape[0] else np.int32(0)
+            sources = np.concatenate(
+                [sources, np.full(pad_lanes, fill, np.int32)])
     k = int(sources.shape[0])
     n = graph.num_nodes
     if k == 0:
@@ -198,7 +225,7 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
                               total_seconds=0.0, edges_relaxed=0,
                               iter_stats=[], mode=mode, shards=shards or 1,
                               backend=backend, schedule=schedule,
-                              delta=delta)
+                              delta=delta, pad_lanes=pad_lanes)
     if graph.num_edges == 0:
         dist = np.full((k, n), op.identity, np_dtype)
         dist[np.arange(k), sources] = op.seed(sources)
@@ -206,7 +233,7 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
                               total_seconds=0.0, edges_relaxed=0,
                               iter_stats=[], mode=mode, shards=shards or 1,
                               backend=backend, schedule=schedule,
-                              delta=delta)
+                              delta=delta, pad_lanes=pad_lanes)
 
     t0 = time.perf_counter()
     dist_b, mask_b = init_batch(n, jnp.asarray(sources), op=op)
@@ -226,7 +253,7 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
                               edges_relaxed=edges, iter_stats=[],
                               mode="fused", backend=backend,
                               schedule="delta", delta=dplan.delta,
-                              relax_rounds=rounds)
+                              relax_rounds=rounds, pad_lanes=pad_lanes)
 
     if shards is not None:
         from repro.core import shard
@@ -239,7 +266,8 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
         return BatchRunResult(dist=np.asarray(dist_b), sources=sources,
                               iterations=iterations, total_seconds=total_s,
                               edges_relaxed=edges, iter_stats=[],
-                              mode="fused", shards=shards)
+                              mode="fused", shards=shards,
+                              pad_lanes=pad_lanes)
 
     if mode == "fused":
         from repro.core import fused
@@ -250,7 +278,8 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
         return BatchRunResult(dist=np.asarray(dist_b), sources=sources,
                               iterations=iterations, total_seconds=total_s,
                               edges_relaxed=edges, iter_stats=[],
-                              mode="fused", backend=backend)
+                              mode="fused", backend=backend,
+                              pad_lanes=pad_lanes)
 
     degrees = np.asarray(graph.degrees)
     iter_stats: list[IterStats] = []
@@ -279,4 +308,4 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
     return BatchRunResult(dist=np.asarray(dist_b), sources=sources,
                           iterations=it, total_seconds=total_s,
                           edges_relaxed=edges, iter_stats=iter_stats,
-                          backend=backend)
+                          backend=backend, pad_lanes=pad_lanes)

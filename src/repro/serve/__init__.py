@@ -1,0 +1,17 @@
+"""Production query-serving tier over the multi-source engine.
+
+Admission control + deadline-aware continuous batching
+(:class:`GraphServer`), multi-tenant resident graphs with swap epochs,
+a pinned distance/landmark cache and executable-reuse tracking, all
+instrumented through one metric dict — docs/serving.md is the contract.
+Every engine axis (strategy schedule handled by the WD batch kernel,
+``backend``, ``schedule``, ``op``) remains a per-request knob.
+"""
+
+from repro.serve.cache import (  # noqa: F401
+    DistanceCache, ExecutableCache, ExecutableEntry, LRUCache)
+from repro.serve.clock import SimulatedClock, SystemClock  # noqa: F401
+from repro.serve.metrics import Metrics, percentile  # noqa: F401
+from repro.serve.server import (  # noqa: F401
+    GraphServer, Request, Response, k_bucket,
+    REJECT_DEADLINE, REJECT_QUEUE_FULL, REJECT_UNKNOWN_GRAPH)

@@ -1,0 +1,381 @@
+"""Simulated-clock harness for the serving tier (repro.serve).
+
+Everything runs under :class:`repro.serve.SimulatedClock` — no wall-clock
+sleeps anywhere — so the open-loop arrival traces below are exactly
+reproducible and the asserted metrics (queue depth, occupancy, latency
+percentiles) are *hand-computed*, not approximated.  The three contracts
+docs/serving.md pins:
+
+* every admitted request's distance row is **bit-identical** to a direct
+  single-source ``engine.run`` call (and a distance-cache hit is
+  bit-identical to both);
+* a deadline that expires — at admission or while queued — produces a
+  rejected Response with ``reason="deadline_expired"``, never silence:
+  submitted == terminal outcomes, always;
+* the metric dict matches the trace: admission counts, batch occupancy
+  (busy lanes / dispatched lanes under K-bucketing), queue-depth gauges
+  and nearest-rank latency percentiles.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.strategies import make_strategy
+from repro.data import rmat_graph, road_grid_graph
+from repro.serve import (GraphServer, Request, SimulatedClock, SystemClock,
+                         k_bucket, percentile, REJECT_DEADLINE,
+                         REJECT_QUEUE_FULL, REJECT_UNKNOWN_GRAPH)
+
+
+def _graph(weighted=True, seed=1):
+    return rmat_graph(scale=6, edge_factor=6, weighted=weighted, seed=seed)
+
+
+def _oracle(graph, source, op="shortest_path"):
+    return engine.run(graph, source, make_strategy("WD"), mode="fused",
+                      op=op).dist
+
+
+def _server(graph, clock, **kw):
+    srv = GraphServer(clock=clock, **kw)
+    srv.load_graph("g", graph)
+    return srv
+
+
+# ---------------------------------------------------------------------------
+# bit-identity of served results
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["fused", "stepped"])
+@pytest.mark.parametrize("op", ["shortest_path", "widest_path"])
+def test_served_rows_bit_identical_to_engine_run(mode, op):
+    g = _graph()
+    clk = SimulatedClock()
+    srv = _server(g, clk, max_batch=4, mode=mode)
+    sources = [1, 5, 9, 13, 2, 7]
+    for s in sources:
+        assert srv.submit(Request(source=s, graph="g", op=op)) is None
+    done = srv.drain()
+    assert sorted(r.request.source for r in done) == sorted(sources)
+    for r in done:
+        assert r.ok and not r.cached
+        ref = _oracle(g, r.request.source, op)
+        assert r.dist.dtype == ref.dtype
+        np.testing.assert_array_equal(r.dist, ref)
+    # second round: every source now hits the distance cache, and the hit
+    # is bit-identical to the cold traversal it cached
+    for s in sources:
+        hit = srv.submit(Request(source=s, graph="g", op=op))
+        assert hit is not None and hit.ok and hit.cached
+        np.testing.assert_array_equal(hit.dist, _oracle(g, s, op))
+
+
+def test_multi_tenant_rows_match_their_own_graph():
+    ga = _graph(seed=1)
+    gb = road_grid_graph(side=7, weighted=True, seed=3)
+    clk = SimulatedClock()
+    srv = GraphServer(clock=clk, max_batch=4)
+    srv.load_graph("a", ga)
+    srv.load_graph("b", gb)
+    for s in [1, 4, 8]:
+        assert srv.submit(Request(source=s, graph="a")) is None
+        assert srv.submit(Request(source=s, graph="b")) is None
+    done = srv.drain()
+    assert len(done) == 6
+    for r in done:
+        g = ga if r.request.graph == "a" else gb
+        np.testing.assert_array_equal(r.dist, _oracle(g, r.request.source))
+    # tenants never batch together: each dispatch's lanes came from one
+    # group of 3, bucketed to 4
+    assert srv.stats()["batches"] == 2
+    assert srv.stats()["lanes_dispatched"] == 8
+
+
+# ---------------------------------------------------------------------------
+# deadlines: rejected with a reason, never silently dropped
+# ---------------------------------------------------------------------------
+
+def test_already_expired_deadline_rejected_at_admission():
+    clk = SimulatedClock(start=100.0)
+    srv = _server(_graph(), clk)
+    r = srv.submit(Request(source=1, graph="g", deadline=99.0))
+    assert r is not None and r.status == "rejected"
+    assert r.reason == REJECT_DEADLINE
+    assert srv.stats()["rejected:deadline_expired"] == 1
+    assert srv.queue_depth == 0
+
+
+def test_queued_deadline_expiry_is_rejected_not_dropped():
+    g = _graph()
+    clk = SimulatedClock()
+    srv = _server(g, clk, max_batch=8)
+    # A has a tight deadline, B is best-effort
+    assert srv.submit(Request(source=1, graph="g", deadline=1.0)) is None
+    assert srv.submit(Request(source=5, graph="g")) is None
+    clk.advance(2.0)                       # A expires while queued
+    done = srv.step()
+    by_src = {r.request.source: r for r in done}
+    assert by_src[1].status == "rejected"
+    assert by_src[1].reason == REJECT_DEADLINE
+    assert by_src[1].dist is None
+    assert by_src[5].ok
+    np.testing.assert_array_equal(by_src[5].dist, _oracle(g, 5))
+    # accounting: both submissions reached a terminal outcome
+    stats = srv.stats()
+    assert stats["submitted"] == 2
+    assert stats["completed"] + stats["rejected_total"] == 2
+    assert stats["rejected:deadline_expired"] == 1
+
+
+def test_every_submission_reaches_a_terminal_outcome():
+    g = _graph()
+    clk = SimulatedClock()
+    srv = _server(g, clk, max_queue=3, max_batch=2)
+    terminal = 0
+    for i, s in enumerate([1, 2, 3, 4, 5]):
+        resp = srv.submit(Request(source=s, graph="g",
+                                  deadline=0.5 if i == 0 else None))
+        if resp is not None:               # rejected at admission
+            terminal += 1
+            assert resp.status == "rejected"
+    clk.advance(1.0)                       # source 1's deadline passes
+    terminal += len(srv.drain())
+    stats = srv.stats()
+    assert terminal == stats["submitted"] == 5
+    assert stats["completed"] + stats["rejected_total"] == 5
+    # 5 submitted = 3 queue slots + 2 queue_full rejects; of the queued,
+    # one expired in queue
+    assert stats["rejected:queue_full"] == 2
+    assert stats["rejected:deadline_expired"] == 1
+    assert stats["completed"] == 2
+
+
+def test_completion_past_deadline_counts_deadline_miss():
+    g = _graph()
+    clk = SimulatedClock()
+    srv = _server(g, clk)
+    assert srv.submit(Request(source=1, graph="g", deadline=5.0)) is None
+    clk.advance(4.0)
+    # the deadline (5.0) is still ahead when the batch starts; model a
+    # service time that overruns it: the step-start read sees t=4, every
+    # later read (the finish stamp) sees t=6
+    reads = {"n": 0}
+
+    def overrunning_clock():
+        reads["n"] += 1
+        if reads["n"] > 1:
+            clk.advance(2.0) if clk() < 6.0 else None
+        return clk()
+
+    srv.clock = overrunning_clock
+    done = srv.step()
+    assert len(done) == 1 and done[0].ok   # completed, not rejected
+    assert done[0].finish_time == 6.0
+    assert srv.stats()["deadline_misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# hand-computed open-loop arrival trace: occupancy / depth / latency
+# ---------------------------------------------------------------------------
+
+def test_open_loop_trace_metrics_match_hand_computation():
+    g = _graph()
+    clk = SimulatedClock()
+    srv = _server(g, clk, max_queue=8, max_batch=4)
+
+    # t=0: three arrivals -> depth 3
+    for s in [1, 2, 3]:
+        assert srv.submit(Request(source=s, graph="g")) is None
+    assert srv.queue_depth == 3
+    assert srv.stats()["queue_depth"] == 3
+
+    # t=1: batch of 3 dispatches in a 4-lane bucket
+    clk.advance(1.0)
+    done = srv.step()
+    assert [r.request.source for r in done] == [1, 2, 3]
+    assert all(r.batch_lanes == 4 for r in done)
+    assert srv.queue_depth == 0
+
+    # t=2: two more arrivals; t=3: they dispatch in a 2-lane bucket
+    clk.advance(1.0)
+    for s in [4, 5]:
+        assert srv.submit(Request(source=s, graph="g")) is None
+    clk.advance(1.0)
+    done = srv.step()
+    assert [r.request.source for r in done] == [4, 5]
+    assert all(r.batch_lanes == 2 for r in done)
+
+    stats = srv.stats()
+    assert stats["batches"] == 2
+    assert stats["lanes_dispatched"] == 6          # 4 + 2
+    assert stats["lanes_busy"] == 5                # 3 + 2
+    assert stats["batch_occupancy"] == pytest.approx(5 / 6)
+    assert stats["queue_depth"] == 0
+    # latencies: [1, 1, 1] for the first batch, [1, 1] for the second
+    assert stats["latency_count"] == 5
+    assert stats["latency_p50"] == 1.0
+    assert stats["latency_p99"] == 1.0
+    assert stats["latency_max"] == 1.0
+    assert stats["latency_mean"] == pytest.approx(1.0)
+
+
+def test_latency_percentiles_nearest_rank():
+    g = _graph()
+    clk = SimulatedClock()
+    srv = _server(g, clk, max_batch=1)
+    waits = [1.0, 2.0, 4.0, 8.0]
+    for s, w in zip([1, 2, 3, 4], waits):
+        assert srv.submit(Request(source=s, graph="g")) is None
+    # max_batch=1: requests complete one per step, each after a further
+    # advance -> latencies 1, 3, 7, 15 (cumulative waits)
+    expect = []
+    total = 0.0
+    for w in waits:
+        clk.advance(w)
+        total += w
+        done = srv.step()
+        assert len(done) == 1
+        expect.append(total - 0.0)
+        assert done[0].latency == pytest.approx(expect[-1])
+    stats = srv.stats()
+    assert stats["latency_p50"] == percentile(expect, 50) == 3.0
+    assert stats["latency_p99"] == percentile(expect, 99) == 15.0
+
+
+# ---------------------------------------------------------------------------
+# batching policy: EDF ordering, compatibility groups, K-bucketing
+# ---------------------------------------------------------------------------
+
+def test_earliest_deadline_first_dispatch_order():
+    g = _graph()
+    clk = SimulatedClock()
+    srv = _server(g, clk, max_batch=2)
+    # submitted loose-deadline first; tight-deadline later arrivals must
+    # still dispatch in the first batch
+    assert srv.submit(Request(source=1, graph="g", deadline=50.0)) is None
+    assert srv.submit(Request(source=2, graph="g", deadline=5.0)) is None
+    assert srv.submit(Request(source=3, graph="g", deadline=6.0)) is None
+    first = srv.step()
+    assert sorted(r.request.source for r in first) == [2, 3]
+    second = srv.step()
+    assert [r.request.source for r in second] == [1]
+
+
+def test_incompatible_requests_never_share_a_batch():
+    g = _graph()
+    clk = SimulatedClock()
+    srv = _server(g, clk, max_batch=8)
+    assert srv.submit(Request(source=1, graph="g",
+                              op="shortest_path")) is None
+    assert srv.submit(Request(source=2, graph="g",
+                              op="widest_path")) is None
+    assert srv.submit(Request(source=3, graph="g",
+                              op="shortest_path")) is None
+    first = srv.step()
+    # head of queue is the shortest_path group: sources 1 and 3
+    assert sorted(r.request.source for r in first) == [1, 3]
+    assert all(r.request.op == "shortest_path" for r in first)
+    second = srv.step()
+    assert [r.request.source for r in second] == [2]
+    assert second[0].request.op == "widest_path"
+    for r in first + second:
+        np.testing.assert_array_equal(
+            r.dist, _oracle(g, r.request.source, r.request.op))
+
+
+def test_k_bucket_rounds_to_pow2_capped():
+    assert k_bucket(1, 8) == 1
+    assert k_bucket(2, 8) == 2
+    assert k_bucket(3, 8) == 4
+    assert k_bucket(5, 8) == 8
+    assert k_bucket(5, 6) == 6          # cap need not be a power of two
+    with pytest.raises(ValueError):
+        k_bucket(0, 8)
+
+
+def test_pad_lanes_surface_in_batch_result():
+    g = _graph()
+    res = engine.run_batch(g, [1, 5, 9], mode="fused", pad_to=4)
+    assert res.pad_lanes == 1
+    assert res.dist.shape[0] == 4
+    np.testing.assert_array_equal(res.dist[3], res.dist[0])
+    with pytest.raises(ValueError):
+        engine.run_batch(g, [1, 5, 9], mode="fused", pad_to=2)
+
+
+# ---------------------------------------------------------------------------
+# admission validation / rejects
+# ---------------------------------------------------------------------------
+
+def test_unknown_graph_rejected_with_reason():
+    srv = GraphServer(clock=SimulatedClock())
+    r = srv.submit(Request(source=0, graph="nope"))
+    assert r.status == "rejected" and r.reason == REJECT_UNKNOWN_GRAPH
+
+
+def test_unloading_a_graph_rejects_its_queued_requests():
+    g = _graph()
+    clk = SimulatedClock()
+    srv = _server(g, clk)
+    assert srv.submit(Request(source=1, graph="g")) is None
+    srv.unload_graph("g")
+    done = srv.step()
+    assert len(done) == 1
+    assert done[0].status == "rejected"
+    assert done[0].reason == REJECT_UNKNOWN_GRAPH
+
+
+def test_queue_full_rejected_with_reason():
+    srv = _server(_graph(), SimulatedClock(), max_queue=2)
+    assert srv.submit(Request(source=1, graph="g")) is None
+    assert srv.submit(Request(source=2, graph="g")) is None
+    r = srv.submit(Request(source=3, graph="g"))
+    assert r.status == "rejected" and r.reason == REJECT_QUEUE_FULL
+
+
+def test_invalid_knobs_raise_not_reject():
+    srv = _server(_graph(), SimulatedClock(), mode="stepped")
+    with pytest.raises(KeyError):
+        srv.submit(Request(source=0, graph="g", op="no_such_op"))
+    with pytest.raises(ValueError):
+        srv.submit(Request(source=0, graph="g", backend="cuda"))
+    with pytest.raises(ValueError):      # delta needs a fused server
+        srv.submit(Request(source=0, graph="g", schedule="delta"))
+    with pytest.raises(ValueError):
+        GraphServer(mode="warp")
+    with pytest.raises(ValueError):
+        GraphServer(max_queue=0)
+
+
+def test_delta_schedule_requests_serve_bit_identically():
+    g = road_grid_graph(side=7, weighted=True, seed=3)
+    clk = SimulatedClock()
+    srv = GraphServer(clock=clk, max_batch=4, mode="fused")
+    srv.load_graph("road", g)
+    for s in [0, 10, 20]:
+        assert srv.submit(Request(source=s, graph="road",
+                                  schedule="delta")) is None
+    done = srv.drain()
+    assert len(done) == 3
+    for r in done:
+        np.testing.assert_array_equal(r.dist, _oracle(g, r.request.source))
+
+
+# ---------------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------------
+
+def test_simulated_clock_semantics():
+    clk = SimulatedClock(start=5.0)
+    assert clk() == 5.0 and clk.now() == 5.0
+    assert clk.advance(2.5) == 7.5
+    assert clk() == 7.5
+    with pytest.raises(ValueError):
+        clk.advance(-1.0)
+
+
+def test_system_clock_is_monotone_nondecreasing():
+    clk = SystemClock()
+    a, b = clk(), clk()
+    assert b >= a
