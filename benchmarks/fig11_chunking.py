@@ -7,7 +7,6 @@ with the resulting duplicate work.  The paper reports 1.11–3.125×
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import csv_line, run_strategy, save_result
 from repro.data import erdos_renyi_graph, rmat_graph, road_grid_graph

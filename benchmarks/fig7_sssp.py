@@ -9,7 +9,6 @@ useful kernel time vs strategy overhead.  Validates:
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (BENCH_GRAPHS, csv_line, get_graph,
                                run_strategy, save_result)

@@ -3,7 +3,6 @@ Fig. 1-style load-imbalance factors that motivate the whole paper."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import BENCH_GRAPHS, csv_line, get_graph, save_result
 from repro.core.balance import graph_imbalance

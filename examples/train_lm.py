@@ -14,11 +14,9 @@ import dataclasses
 import logging
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.data.pipeline import TokenPipeline
-from repro.launch.mesh import make_host_mesh
 from repro.models.model import LanguageModel
 from repro.models.params import init_params, param_count
 from repro.optim.adamw import AdamW

@@ -1,0 +1,63 @@
+"""repro.analysis — static contract checking for the strategy/kernel stack.
+
+The paper's claim — that load-balancing strategies are freely swappable
+because they compute the same fixed point — rests on contracts this repo
+otherwise only checks when a test happens to exercise them: the
+:class:`~repro.core.operators.EdgeOp` monoid laws, the strategy
+registry's capability flags, jit static-argument discipline, and the
+Pallas kernels' VMEM block budgets.  This package checks them *before*
+execution, so a third-party operator or strategy is held to the same
+contract as the built-ins on day one (docs/analysis.md).
+
+Four passes, each a module with ``PASS_NAME``, ``RULES`` and
+``run(paths) -> list[Finding]``:
+
+=============  =======================  ==================================
+pass           rules                    checks
+=============  =======================  ==================================
+``retrace``    RT001–RT004 (+RT000)     jit retrace/recompile hazards
+``contracts``  CT001–CT006              EdgeOp monoid laws (int8 domain)
+``capabilities`` CP001–CP003            capability flags vs. lowerings
+``vmem``       VM001–VM002              Pallas VMEM block budgets
+=============  =======================  ==================================
+
+Run ``python -m repro.analysis [paths]`` (defaults to ``src/repro``);
+suppress individual findings with ``# repro: disable=RULE`` comments
+(:mod:`repro.analysis.findings`).  The contract pass also runs at
+``register_operator()`` time when ``REPRO_CHECK_CONTRACTS`` is set.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.findings import (  # noqa: F401
+    Finding, SEVERITIES, apply_suppressions, parse_suppressions,
+    render_json, render_pretty)
+
+#: pass name -> module path; order is report order.  Import is deferred
+#: to :func:`get_pass` so ``--passes=retrace`` works without jax.
+PASSES = {
+    "retrace": "repro.analysis.retrace",
+    "contracts": "repro.analysis.contracts",
+    "capabilities": "repro.analysis.capabilities",
+    "vmem": "repro.analysis.vmem",
+}
+
+
+def get_pass(name: str):
+    """Import and return one pass module by registry name."""
+    import importlib
+    try:
+        modpath = PASSES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown pass {name!r}; available: {sorted(PASSES)}") from None
+    return importlib.import_module(modpath)
+
+
+def run_all(paths, passes=None) -> list:
+    """Run the named passes (default: all) over ``paths``; returns the
+    concatenated, unsuppressed findings."""
+    findings: list = []
+    for name in (passes or PASSES):
+        findings.extend(get_pass(name).run(paths))
+    return findings

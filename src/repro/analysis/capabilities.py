@@ -1,0 +1,251 @@
+"""Capability cross-checker (rules CP001–CP003).
+
+The strategy registry's capability flags (:mod:`repro.core.strategies`)
+are *promises*: ``SHARDABLE`` promises a multi-device lowering in
+:mod:`repro.core.shard`, ``PALLAS_BACKEND`` promises every dispatched
+kernel accepts ``backend="pallas"``, ``PRIORITY_SCHEDULE`` promises
+delta-stepping phase lowerings in :mod:`repro.core.priority`, and
+``FRONTIER_INIT`` promises ``iterate`` can start from an arbitrary
+dense (dist, mask) pair.  The engine gates on the flags alone, so a
+declared-but-unbacked flag fails at dispatch time deep inside a run —
+or worse, silently computes the wrong thing.  This pass cross-checks
+declarations against the artifacts that back them:
+
+* **CP001 — phantom capability**: a registered strategy declares a flag
+  the checker cannot trace to a concrete lowering (e.g. ``SHARDABLE``
+  with no fused kernel in ``shard.SHARDED_KERNELS``, or
+  ``PALLAS_BACKEND`` on a strategy whose entry point has no ``backend``
+  parameter to thread).
+* **CP002 — undeclared capability gate**: a source-level gate site tests
+  a capability name that is not one of the registry's known flags — a
+  typo'd string or stale constant means the gate can never pass (or
+  never fail).
+* **CP003 — unknown capability flag**: a registered strategy declares a
+  flag string outside the known vocabulary; the engine's gates will
+  simply never look at it.
+
+CP001/CP003 inspect the *live registry* (they import
+``repro.core.strategies``); CP002 is a static AST scan over the given
+paths.  :func:`check_strategy` is callable on an unregistered class so
+tests can exercise fixtures without polluting the global registry.
+"""
+
+from __future__ import annotations
+
+import ast
+import inspect
+from pathlib import Path
+
+from repro.analysis.findings import Finding, RUNTIME_FILE
+
+PASS_NAME = "capabilities"
+RULES = ("CP001", "CP002", "CP003")
+
+#: constant-name -> flag-string vocabulary the registry defines.
+#: Computed lazily so importing this module never imports jax.
+def known_flags() -> dict:
+    from repro.core import strategies
+    return {
+        "FRONTIER_INIT": strategies.FRONTIER_INIT,
+        "SHARDABLE": strategies.SHARDABLE,
+        "PALLAS_BACKEND": strategies.PALLAS_BACKEND,
+        "PRIORITY_SCHEDULE": strategies.PRIORITY_SCHEDULE,
+    }
+
+
+def _anchor(cls) -> tuple:
+    """(file, line) of a strategy class, best-effort."""
+    try:
+        return (inspect.getsourcefile(cls) or RUNTIME_FILE,
+                inspect.getsourcelines(cls)[1])
+    except (OSError, TypeError):
+        return RUNTIME_FILE, 0
+
+
+def _entry_point(cls):
+    """The method a strategy's work flows through: ``iterate`` when
+    overridden, else ``relax_and_push`` (EP's shape), else None."""
+    from repro.core.strategies import StrategyBase
+    if "iterate" in _mro_defined(cls) and (
+            cls.iterate is not StrategyBase.iterate):
+        return cls.iterate, "iterate"
+    if hasattr(cls, "relax_and_push"):
+        return cls.relax_and_push, "relax_and_push"
+    return None, None
+
+
+def _mro_defined(cls) -> set:
+    from repro.core.strategies import StrategyBase
+    names: set = set()
+    for klass in cls.__mro__:
+        if klass is StrategyBase or klass is object:
+            break
+        names |= set(vars(klass))
+    return names
+
+
+def check_strategy(name: str, cls) -> list:
+    """Cross-check one strategy class's declared capabilities against the
+    lowerings that would back them.  Usable on unregistered fixtures."""
+    from repro.core import strategies
+    from repro.core.fused import fused_kernel_name
+    from repro.core.shard import SHARDED_KERNELS
+
+    file, line = _anchor(cls)
+    findings: list = []
+
+    def finding(rule, message, hint):
+        findings.append(Finding(
+            rule=rule, message=message, file=file, line=line, hint=hint))
+
+    caps = frozenset(getattr(cls, "capabilities", frozenset()))
+    flags = known_flags()
+    for flag in sorted(caps - frozenset(flags.values())):
+        finding(
+            "CP003",
+            f"strategy {name!r} declares unknown capability {flag!r} — "
+            f"no engine gate ever tests it "
+            f"(known: {sorted(flags.values())})",
+            "use the constants exported by repro.core.strategies, or add "
+            "the new flag (and its gate) there first")
+
+    kernel = fused_kernel_name(cls)
+    entry, entry_name = _entry_point(cls)
+
+    if strategies.SHARDABLE in caps and kernel not in SHARDED_KERNELS:
+        finding(
+            "CP001",
+            f"strategy {name!r} declares SHARDABLE but its fused kernel "
+            f"({kernel!r}) has no multi-device lowering in "
+            f"repro.core.shard (SHARDED_KERNELS={SHARDED_KERNELS}) — "
+            f"engine.run(..., shards=) would pass the gate and fail at "
+            f"dispatch",
+            "drop SHARDABLE from the declaration, or add the kernel's "
+            "shard lowering to repro.core.shard")
+
+    if strategies.PRIORITY_SCHEDULE in caps and (
+            kernel is None or kernel == "EP"):
+        finding(
+            "CP001",
+            f"strategy {name!r} declares PRIORITY_SCHEDULE but "
+            f"{'has no fused kernel' if kernel is None else 'lowers to EP, whose edge worklist'}"
+            f" {'to bucket' if kernel is None else 'has no per-node tentative value to bucket by'}"
+            f" — schedule='delta' would pass the gate with no phase "
+            f"lowering behind it",
+            "drop PRIORITY_SCHEDULE, or add the strategy's delta-stepping "
+            "phases to repro.core.priority")
+
+    if strategies.PALLAS_BACKEND in caps:
+        ok = False
+        if entry is not None:
+            try:
+                ok = "backend" in inspect.signature(entry).parameters
+            except (TypeError, ValueError):
+                ok = True  # uninspectable (C callable) — give benefit
+        if not ok:
+            finding(
+                "CP001",
+                f"strategy {name!r} declares PALLAS_BACKEND but its entry "
+                f"point ({entry_name or 'none found'}) takes no "
+                f"``backend`` parameter to thread to its kernels — "
+                f"engine.run(..., backend='pallas') would silently run "
+                f"XLA",
+                "thread backend=... through iterate/relax_and_push to "
+                "every kernel, or drop the flag")
+
+    if strategies.FRONTIER_INIT in caps:
+        has_iterate = entry_name == "iterate"
+        if not has_iterate:
+            finding(
+                "CP001",
+                f"strategy {name!r} declares FRONTIER_INIT but overrides "
+                f"no ``iterate`` — it cannot consume an arbitrary dense "
+                f"(dist, frontier-mask) pair, so engine.fixed_point "
+                f"would pass the gate and hit NotImplementedError",
+                "override iterate(state, dist, updated_mask, count, ...) "
+                "or drop FRONTIER_INIT")
+
+    return findings
+
+
+def check_registry() -> list:
+    """CP001/CP003 over every registered strategy."""
+    from repro.core.strategies import STRATEGIES
+    findings: list = []
+    for name in sorted(STRATEGIES):
+        findings.extend(check_strategy(name, STRATEGIES[name]))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# CP002: static scan of gate sites
+# ---------------------------------------------------------------------------
+
+def _gate_tests(tree: ast.AST):
+    """Yield (node, tested_operand) for every ``X in Y.capabilities`` /
+    ``X not in strategy_capabilities(...)`` membership test."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        for cmp_op, comparator in zip(node.ops, node.comparators):
+            if not isinstance(cmp_op, (ast.In, ast.NotIn)):
+                continue
+            target = comparator
+            is_caps = (
+                isinstance(target, ast.Attribute)
+                and target.attr == "capabilities")
+            is_caps_call = (
+                isinstance(target, ast.Call)
+                and isinstance(target.func, (ast.Name, ast.Attribute))
+                and (target.func.id if isinstance(target.func, ast.Name)
+                     else target.func.attr) == "strategy_capabilities")
+            if is_caps or is_caps_call:
+                yield node, node.left
+
+
+def check_file(path, text=None) -> list:
+    """CP002 over one source file."""
+    path = Path(path)
+    if text is None:
+        text = path.read_text(encoding="utf-8")
+    try:
+        tree = ast.parse(text, filename=str(path))
+    except SyntaxError:
+        return []  # retrace pass reports RT000 for unparseable files
+    flags = known_flags()
+    findings: list = []
+    for node, operand in _gate_tests(tree):
+        bad = None
+        if isinstance(operand, ast.Constant) and isinstance(
+                operand.value, str):
+            if operand.value not in flags.values():
+                bad = repr(operand.value)
+        elif isinstance(operand, ast.Name):
+            if operand.id not in flags and operand.id == operand.id.upper():
+                # lowercase names are locals holding a flag — fine;
+                # an UPPERCASE name outside the vocabulary is a stale or
+                # typo'd constant
+                bad = operand.id
+        if bad is not None:
+            findings.append(Finding(
+                rule="CP002",
+                message=(
+                    f"gate tests undeclared capability {bad} against a "
+                    f"capabilities set — no registered strategy can ever "
+                    f"declare it (known flags: {sorted(flags.values())})"),
+                file=str(path), line=node.lineno,
+                hint=("gate on the constants exported by "
+                      "repro.core.strategies; if this is a new flag, "
+                      "declare it there")))
+    return findings
+
+
+def run(paths) -> list:
+    """The full capability pass: registry cross-check + gate-site scan."""
+    findings = check_registry()
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings.extend(check_file(f))
+    return findings

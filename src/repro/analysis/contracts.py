@@ -1,0 +1,303 @@
+"""EdgeOp contract verifier: monoid laws, checked by evaluation (CT001–CT006).
+
+The repo's whole equivalence story — every strategy, both execution
+modes, both backends, BSP and delta schedules reaching the *same bits* —
+rests on the algebra an :class:`repro.core.operators.EdgeOp` declares:
+``combine`` is an associative, commutative monoid with neutral element
+``identity``; the activation predicate fires exactly when a candidate
+changes the value; ``weight_additive`` promises candidates land in later
+delta buckets.  Nothing in the dataclass *enforces* those laws — a
+third-party operator with a subtly wrong ``update`` lambda produces
+schedule-dependent results that no single-strategy test will catch.
+
+This pass evaluates the laws exhaustively over the **full int8 domain**
+(every value in ``[-128, 127]``, plus the operator's ``identity`` and
+source seed; restricted by the operator's declared
+:attr:`~repro.core.operators.EdgeOp.value_min` lower bound) — small
+enough to sweep every pair and triple, large enough to hit
+sign/overflow/boundary behavior:
+
+``CT001`` **identity-neutrality** — ``combine(identity, x) == x`` for
+    every domain value.  A wrong identity makes masked/padded lanes
+    clobber real values (they scatter ``identity`` by design).
+
+``CT002`` **relax-order-independence** — delivering candidates ``a``
+    then ``b`` equals ``b`` then ``a`` equals the pre-folded
+    ``combine(a, b)``, where "delivering" is the engine's gated step
+    ``apply(cur, c) = where(improves(c, cur), combine(cur, c), cur)``.
+    This is the associativity/commutativity law *as the kernels actually
+    execute it*: chunk boundaries differ per strategy (BS delivers per
+    edge column, WD folds per merge-path tile), so a violation makes
+    strategies disagree — the exact failure the bit-parity matrix
+    exists to prevent, caught here without running a traversal.
+
+``CT003`` **activation-consistency** — ``improves(c, cur)`` must be
+    true exactly when ``combine(cur, c) != cur`` (for ``add``: when
+    ``c != identity``).  Too strict ⇒ converged values that still
+    violate the relax inequality (missing frontier reactivations); too
+    loose ⇒ nodes re-activate forever (fused ``while_loop`` livelock).
+
+``CT004`` **re-delivery idempotence** — ``apply(apply(x, c), c) ==
+    apply(x, c)``.  Delta-stepping re-relaxes settled buckets and the
+    serving tier's :class:`repro.serve.cache.DistanceCache` key excludes
+    backend/schedule on the strength of this law (``op.idempotent``).
+
+``CT005`` **weight-additive consistency** — when the operator declares
+    :attr:`EdgeOp.weight_additive`, ``rank(message(v, w)) >= rank(v) + w``
+    (rank per :func:`repro.core.worklist.bucket_rank`).  The light/heavy
+    edge split defers ``w > Δ`` edges on this promise; a violation makes
+    delta-stepping settle buckets out of order.
+
+``CT006`` **message-dtype stability** — ``message`` must map
+    ``op.dtype`` arrays to ``op.dtype`` arrays elementwise.  A widening
+    message (int32 → float32 promotion from a stray Python float)
+    changes the scatter dtype and breaks bit-parity across backends.
+
+Run it three ways: ``python -m repro.analysis`` (CLI, all registered
+operators), :func:`check_operator` (one operator, e.g. in tests), or at
+``register_operator()`` time by exporting ``REPRO_CHECK_CONTRACTS=1``
+(:mod:`repro.core.operators` calls :func:`check_operator` and refuses
+the registration on error findings) — day-one enforcement for
+third-party operators.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Optional
+
+import numpy as np
+
+from repro.analysis.findings import RUNTIME_FILE, Finding
+
+PASS_NAME = "contracts"
+RULES = ("CT001", "CT002", "CT003", "CT004", "CT005", "CT006")
+
+#: x-axis slice width of the triple sweep — 257³ values are evaluated in
+#: slabs so peak memory stays a few hundred MB of int32 temporaries
+_SLAB = 32
+
+
+def _fold(combine: str, a, b):
+    if combine == "min":
+        return np.minimum(a, b)
+    if combine == "max":
+        return np.maximum(a, b)
+    return a + b
+
+
+def _improves(op, cand, cur):
+    return np.asarray(op.improves(cand, cur), bool)
+
+
+def _apply(op, cur, cand):
+    """The engine's gated relax step, vectorized on the host."""
+    return np.where(_improves(op, cand, cur),
+                    _fold(op.combine, cur, cand), cur)
+
+
+def _domain(op) -> np.ndarray:
+    """The full int8 domain plus the operator's own sentinels, restricted
+    to the operator's declared value domain (``EdgeOp.value_min``)."""
+    dt = np.dtype(op.dtype)
+    vals = np.arange(-128, 128, dtype=np.int64)
+    extras = [int(op.identity)]
+    if op.source_value is not None:
+        extras.append(int(op.source_value))
+    vals = np.unique(np.concatenate([vals, np.asarray(extras, np.int64)]))
+    value_min = getattr(op, "value_min", None)
+    if value_min is not None:
+        vals = vals[vals >= int(value_min)]
+    return vals.astype(dt)
+
+
+def _anchor(op) -> tuple:
+    """(file, line) of the operator's defining module, best effort."""
+    for obj in (op.message, op.update):
+        if obj is None:
+            continue
+        try:
+            code = obj.__code__
+            return code.co_filename, code.co_firstlineno
+        except AttributeError:
+            continue
+    try:
+        mod = inspect.getmodule(type(op))
+        return inspect.getsourcefile(mod) or RUNTIME_FILE, 0
+    except TypeError:
+        return RUNTIME_FILE, 0
+
+
+def _first_bad(mask: np.ndarray, *grids) -> tuple:
+    """Coordinates of the first violation in a boolean 'bad' mask."""
+    idx = np.unravel_index(int(np.argmax(mask)), mask.shape)
+    return tuple(int(g[i]) for g, i in zip(grids, idx))
+
+
+def check_operator(op, *, domain: Optional[np.ndarray] = None) -> list:
+    """Evaluate CT001–CT006 for one operator; returns findings."""
+    file, line = _anchor(op)
+    D = _domain(op) if domain is None else np.asarray(domain, op.dtype)
+    findings: list = []
+
+    def finding(rule, message, hint):
+        findings.append(Finding(rule=rule, message=message, hint=hint,
+                                file=file, line=line))
+
+    ident = np.asarray(op.identity, op.dtype)
+
+    # CT006 first: if message mangles dtype/shape the other sweeps would
+    # report derived noise
+    w = np.ones_like(D)
+    try:
+        msg = np.asarray(op.message(D, w))
+    except Exception as exc:
+        finding("CT006",
+                f"operator {op.name!r}: message raised {exc!r} on plain "
+                f"{np.dtype(op.dtype).name} arrays",
+                "message must be a pure elementwise jnp function of "
+                "(val_src, w)")
+        return findings
+    if msg.shape != D.shape or np.dtype(msg.dtype) != np.dtype(op.dtype):
+        finding("CT006",
+                f"operator {op.name!r}: message({np.dtype(op.dtype).name}"
+                f"[{D.size}], w) returned {np.dtype(msg.dtype).name}"
+                f"{list(msg.shape)} — dtype/shape must be preserved or "
+                f"the scatter changes representation mid-traversal",
+                "cast inside message (e.g. wrap Python scalars in "
+                "jnp.asarray(..., op.dtype))")
+
+    # CT001: identity neutrality (the raw monoid, both sides)
+    bad = (_fold(op.combine, ident, D) != D) | (_fold(op.combine, D, ident)
+                                                != D)
+    if bad.any():
+        (x,) = _first_bad(bad, D)
+        finding("CT001",
+                f"operator {op.name!r}: identity {int(op.identity)} is "
+                f"not neutral for combine={op.combine!r} — e.g. "
+                f"combine({int(op.identity)}, {x}) = "
+                f"{int(_fold(op.combine, ident, np.asarray(x, op.dtype)))}"
+                f" != {x}; masked/padded lanes scatter the identity and "
+                f"would clobber real values",
+                "set identity to the true neutral element (min: INF, "
+                "max: dtype min, add: 0), or declare the restricted "
+                "domain the identity is neutral over (EdgeOp.value_min)")
+
+    # CT003: activation fires iff the fold changes the value
+    C, X = np.meshgrid(D, D, indexing="ij")
+    imp = _improves(op, C, X)
+    if op.combine == "add":
+        changes = C != ident
+    else:
+        changes = _fold(op.combine, X, C) != X
+    bad = imp != changes
+    if bad.any():
+        i, j = np.unravel_index(int(np.argmax(bad)), bad.shape)
+        c, x = int(D[i]), int(D[j])
+        direction = ("never re-converges (livelock under mode='fused')"
+                     if imp[bad].any() else
+                     "misses frontier re-activations (wrong fixed point)")
+        finding("CT003",
+                f"operator {op.name!r}: improves({c}, {x}) = "
+                f"{bool(imp[i, j])} but combine({x}, {c}) "
+                f"{'changes' if changes[i, j] else 'does not change'} "
+                f"the value — an activation predicate inconsistent with "
+                f"the monoid {direction}",
+                "make update equivalent to 'combine(cur, cand) != cur' "
+                "(strict improvement for min/max), or drop update to get "
+                "the consistent default")
+
+    # CT004: re-delivering the same candidate is a no-op
+    once = _apply(op, X, C)
+    twice = _apply(op, once, C)
+    bad = once != twice
+    if op.idempotent and bad.any():
+        c, x = _first_bad(bad, D, D)
+        finding("CT004",
+                f"operator {op.name!r} (combine={op.combine!r}) claims "
+                f"idempotence but re-delivering candidate {c} to value "
+                f"{x} moves it twice — delta-stepping re-relaxation and "
+                f"the DistanceCache's backend/schedule-free key both "
+                f"assume re-delivery is a no-op",
+                "fix the update predicate (a too-loose improves re-fires "
+                "on equal values), or use an add-style non-idempotent "
+                "declaration and schedule='bsp'")
+
+    # CT002: relax-order independence over the full triple domain
+    counter = _order_independence_counterexample(op, D)
+    if counter is not None:
+        x, a, b, ab, ba = counter
+        finding("CT002",
+                f"operator {op.name!r}: relax order changes the result — "
+                f"value {x} receiving candidates ({a}, then {b}) settles "
+                f"at {ab}, but ({b}, then {a}) settles at {ba}; schedules "
+                f"chunk deliveries differently (BS per edge column, WD "
+                f"per merge-path tile), so strategies would disagree "
+                f"bit-for-bit",
+                "the gated step where(improves(c, cur), combine(cur, c), "
+                "cur) must be an associative+commutative action — fix "
+                "update/combine so delivery order cannot matter")
+
+    # CT005: weight-additive rank growth
+    if op.weight_additive:
+        from repro.core.graph import INF
+        from repro.core.worklist import bucket_rank
+        desc = op.combine == "max"
+        v = D[(D >= 0) & (D < INF)]
+        if v.size:
+            wts = np.arange(0, 128, dtype=op.dtype)
+            V, W = np.meshgrid(v, wts, indexing="ij")
+            rank_v = np.asarray(bucket_rank(V, descending=desc), np.int64)
+            rank_m = np.asarray(
+                bucket_rank(np.asarray(op.message(V, W)), descending=desc),
+                np.int64)
+            bad = rank_m < rank_v + W
+            if bad.any():
+                i, j = np.unravel_index(int(np.argmax(bad)), bad.shape)
+                vv, ww = int(v[i]), int(wts[j])
+                finding(
+                    "CT005",
+                    f"operator {op.name!r} declares weight_additive=True "
+                    f"but rank(message({vv}, {ww})) = {int(rank_m[i, j])}"
+                    f" < rank({vv}) + {ww} — a heavy edge deferred past "
+                    f"its bucket epoch would then settle too late "
+                    f"(wrong delta-stepping distances)",
+                    "declare weight_additive=False (every edge treated "
+                    "as light — still correct, nothing deferred), or fix "
+                    "message to grow the rank by at least w")
+    return findings
+
+
+def _order_independence_counterexample(op, D: np.ndarray):
+    """First (x, a, b) where delivery order or pre-folding changes the
+    outcome, or None.  Swept in slabs of the triple grid."""
+    n = D.size
+    for lo in range(0, n, _SLAB):
+        x = D[lo:lo + _SLAB][:, None, None]
+        a = D[None, :, None]
+        b = D[None, None, :]
+        ab = _apply(op, _apply(op, np.broadcast_to(x, (x.shape[0], n, n)),
+                               a), b)
+        ba = _apply(op, _apply(op, np.broadcast_to(x, (x.shape[0], n, n)),
+                               b), a)
+        folded = _apply(op, np.broadcast_to(x, (x.shape[0], n, n)),
+                        _fold(op.combine, a, b))
+        bad = (ab != ba) | (ab != folded)
+        if bad.any():
+            i, j, k = np.unravel_index(int(np.argmax(bad)), bad.shape)
+            return (int(D[lo + i]), int(D[j]), int(D[k]),
+                    int(ab[i, j, k]), int(ba[i, j, k]))
+    return None
+
+
+def run(paths: list) -> list:
+    """Pass entry point: verify every registered operator.
+
+    ``paths`` is unused (this is a registry pass, not a file pass) but
+    accepted so all passes share one signature."""
+    del paths
+    from repro.core.operators import OPERATORS
+    findings: list = []
+    for op in OPERATORS.values():
+        findings.extend(check_operator(op))
+    return findings

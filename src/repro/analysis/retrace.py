@@ -1,0 +1,388 @@
+"""Retrace-hazard lint: AST rules over jit boundaries (rules RT001–RT004).
+
+The recompile/retrace bug class the fused engine's TRACE/DISPATCH
+counters catch *after the fact* (a test observes an unexpected
+compilation), caught *before* execution instead:
+
+``RT001`` **jit-nonstatic-control-arg** — a parameter of a jitted
+    function steers Python control flow (``if``/``while`` tests,
+    ``for _ in range(param)``) but is not listed in ``static_argnames``.
+    Under trace the branch condition is a tracer: jax raises a
+    ``ConcretizationTypeError`` at best, or — when the value happens to
+    be a weak-typed Python scalar — silently burns one compilation per
+    distinct value.
+
+``RT002`` **jit-unhashable-static-default** — a ``static_argnames``
+    entry defaults to a list/dict/set.  Static args are jit-cache keys
+    and must be hashable; the default makes every defaulted call raise.
+
+``RT003`` **jit-module-array-closure** — a jitted function closes over
+    a module-level ``jnp`` array.  The array is captured as a trace
+    constant: rebuilding the module object (reload, test fixtures
+    re-importing, sharding re-creating arrays on other devices) silently
+    recompiles, and the baked-in buffer pins device memory for the
+    process lifetime.  Thread it through as an argument instead.
+
+``RT004`` **jit-impure-traced-call** — ``time.time()``-style clock
+    reads or stateful RNG calls (``np.random.*``, ``random.*``) inside
+    traced code.  The call runs once at trace time and its result is
+    frozen into the executable — timings measure nothing and "random"
+    values repeat forever (use ``jax.random`` with threaded keys).
+
+Scope: functions *decorated* with ``jax.jit`` (bare or via
+``functools.partial``), including ``def``s nested inside them (nested
+defs trace with the parent).  Host-stepped drivers that merely *call*
+jitted kernels are deliberately out of scope — the repo's layering
+(docs/architecture.md) keeps host syncs legal there.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, Optional
+
+from repro.analysis.findings import Finding
+
+PASS_NAME = "retrace"
+RULES = ("RT001", "RT002", "RT003", "RT004")
+
+#: dotted call prefixes that freeze a host-side value into the trace
+IMPURE_CALLS = (
+    "time.time", "time.perf_counter", "time.monotonic",
+    "time.process_time", "time.time_ns", "time.perf_counter_ns",
+    "np.random.", "numpy.random.",
+    "random.random", "random.randint", "random.randrange",
+    "random.uniform", "random.choice", "random.shuffle", "random.sample",
+    "random.gauss", "random.seed",
+)
+
+#: jnp constructors whose module-level results are device arrays (the
+#: RT003 capture class); jnp.int32(...) etc. are weak scalars and cheap,
+#: but they are still baked-in constants, so they count too.
+_ARRAY_CTORS = {
+    "array", "asarray", "arange", "zeros", "ones", "full", "linspace",
+    "eye", "empty", "zeros_like", "ones_like", "full_like",
+}
+
+
+def _dotted(node: ast.AST) -> str:
+    """'a.b.c' for Name/Attribute chains, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return _dotted(node) in ("jax.jit", "jit")
+
+
+def _jit_decorator(dec: ast.AST) -> Optional[ast.Call]:
+    """Return the ``partial(jax.jit, ...)`` Call (or a synthetic marker
+    Call for bare ``@jax.jit``) when ``dec`` jit-wraps the function."""
+    if _is_jax_jit(dec):                       # @jax.jit
+        return ast.Call(func=dec, args=[], keywords=[])
+    if isinstance(dec, ast.Call):
+        if _is_jax_jit(dec.func):              # @jax.jit(...)
+            return dec
+        if _dotted(dec.func) in ("partial", "functools.partial"):
+            if dec.args and _is_jax_jit(dec.args[0]):
+                return dec                     # @partial(jax.jit, ...)
+    return None
+
+
+def _static_names(call: ast.Call, fn: ast.FunctionDef) -> Optional[set]:
+    """The function's static parameter names, or None when they cannot
+    be determined statically (non-literal static_argnames)."""
+    names: set = set()
+    args = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            lit = _str_seq(kw.value)
+            if lit is None:
+                return None
+            names |= set(lit)
+        elif kw.arg == "static_argnums":
+            nums = _int_seq(kw.value)
+            if nums is None:
+                return None
+            for i in nums:
+                if 0 <= i < len(args):
+                    names.add(args[i])
+    return names
+
+
+def _str_seq(node: ast.AST) -> Optional[list]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, str)):
+                return None
+            out.append(el.value)
+        return out
+    return None
+
+
+def _int_seq(node: ast.AST) -> Optional[list]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, int)):
+                return None
+            out.append(el.value)
+        return out
+    return None
+
+
+def _param_names(fn: ast.FunctionDef) -> list:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+
+
+def _names_in(node: ast.AST) -> Iterable[ast.Name]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+            yield sub
+
+
+def _module_jnp_arrays(tree: ast.Module) -> dict:
+    """Module-level ``NAME = jnp.<ctor>(...)`` bindings -> assign line."""
+    out: dict = {}
+    for node in tree.body:
+        targets = []
+        value = None
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        if value is None or not isinstance(value, ast.Call):
+            continue
+        dotted = _dotted(value.func)
+        head, _, tail = dotted.rpartition(".")
+        if head in ("jnp", "jax.numpy") and tail in _ARRAY_CTORS:
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = node.lineno
+    return out
+
+
+def _local_bindings(fn: ast.FunctionDef) -> set:
+    """Names bound anywhere inside ``fn`` (params, assignments, defs,
+    imports, comprehension targets) — loads of these are not closures."""
+    bound = set(_param_names(fn))
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            bound.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            bound.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                bound.add((alias.asname or alias.name).split(".")[0])
+        elif isinstance(node, ast.comprehension):
+            for name in _names_in_store(node.target):
+                bound.add(name)
+    return bound
+
+
+def _names_in_store(node: ast.AST) -> Iterable[str]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            yield sub.id
+
+
+def _none_checked(test: ast.AST) -> set:
+    """``id()`` of Name nodes appearing only as ``X is [not] None``
+    operands.  None-ness is *pytree structure* — static under trace
+    (jax traces the None and the array variant separately) — so such
+    branches are legitimate and RT001 must not flag them."""
+    out: set = set()
+    for sub in ast.walk(test):
+        if (isinstance(sub, ast.Compare)
+                and all(isinstance(o, (ast.Is, ast.IsNot)) for o in sub.ops)
+                and all(isinstance(c, ast.Constant) and c.value is None
+                        for c in sub.comparators)):
+            for name in _names_in(sub):
+                out.add(id(name))
+    return out
+
+
+def _control_flow_params(fn: ast.FunctionDef) -> dict:
+    """Parameter names read by Python control flow in ``fn``'s own body
+    (nested defs excluded — their params are separate) -> first line."""
+    params = set(_param_names(fn))
+    # names rebound locally stop being the parameter at the control site
+    # only if reassigned before use; being conservative (treating any
+    # read in control flow as the param) keeps the rule simple and the
+    # false-positive rate acceptable for kernel-style code.
+    hits: dict = {}
+
+    def visit(node: ast.AST, in_nested: bool):
+        for child in ast.iter_child_nodes(node):
+            nested = in_nested or isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+            if not in_nested:
+                test = None
+                if isinstance(child, (ast.If, ast.While)):
+                    test = child.test
+                elif isinstance(child, ast.Assert):
+                    test = child.test
+                elif isinstance(child, ast.For):
+                    it = child.iter
+                    if (isinstance(it, ast.Call)
+                            and _dotted(it.func) in ("range",)):
+                        test = it
+                elif isinstance(child, ast.IfExp):
+                    test = child.test
+                if test is not None:
+                    skip = _none_checked(test)
+                    for name in _names_in(test):
+                        if (name.id in params and name.id not in hits
+                                and id(name) not in skip):
+                            hits[name.id] = test.lineno
+            visit(child, nested)
+
+    visit(fn, False)
+    return hits
+
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp)
+
+
+def _defaults_by_name(fn: ast.FunctionDef) -> dict:
+    a = fn.args
+    out: dict = {}
+    pos = a.posonlyargs + a.args
+    for param, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        out[param.arg] = default
+    for param, default in zip(a.kwonlyargs, a.kw_defaults):
+        if default is not None:
+            out[param.arg] = default
+    return out
+
+
+def check_file(path: str, text: Optional[str] = None) -> list:
+    """Run RT001–RT004 over one Python source file."""
+    if text is None:
+        text = Path(path).read_text(encoding="utf-8")
+    try:
+        tree = ast.parse(text, filename=path)
+    except SyntaxError as exc:
+        return [Finding(
+            rule="RT000", file=path, line=exc.lineno or 0,
+            message=f"file does not parse: {exc.msg}",
+            hint="fix the syntax error (every other pass skipped it)")]
+    module_arrays = _module_jnp_arrays(tree)
+    findings: list = []
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        for dec in node.decorator_list:
+            call = _jit_decorator(dec)
+            if call is not None:
+                findings.extend(
+                    _check_jitted(path, node, call, module_arrays))
+                break
+    return findings
+
+
+def _check_jitted(path: str, fn: ast.FunctionDef, jit_call: ast.Call,
+                  module_arrays: dict) -> list:
+    findings = []
+    static = _static_names(jit_call, fn)
+    defaults = _defaults_by_name(fn)
+
+    # RT001: control-flow args must be static
+    if static is not None:
+        for name, lineno in sorted(_control_flow_params(fn).items()):
+            if name not in static:
+                findings.append(Finding(
+                    rule="RT001", file=path, line=lineno,
+                    message=(
+                        f"jitted function {fn.name!r} branches on "
+                        f"parameter {name!r}, which is not in "
+                        f"static_argnames — under trace the condition is "
+                        f"a tracer (ConcretizationTypeError, or one "
+                        f"silent recompile per value)"),
+                    hint=(f"add {name!r} to static_argnames, or rewrite "
+                          f"the branch with jnp.where/lax.cond")))
+
+        # RT002: static args must stay hashable
+        for name in sorted(static):
+            default = defaults.get(name)
+            if default is not None and isinstance(default, _UNHASHABLE):
+                findings.append(Finding(
+                    rule="RT002", file=path, line=default.lineno,
+                    message=(
+                        f"static arg {name!r} of jitted function "
+                        f"{fn.name!r} defaults to an unhashable "
+                        f"{type(default).__name__.lower()} literal — "
+                        f"static args are jit-cache keys and every "
+                        f"defaulted call will raise TypeError"),
+                    hint="use a tuple / frozenset / None-sentinel default"))
+
+    # RT003 + RT004 cover the whole traced region incl. nested defs
+    local = _local_bindings(fn)
+    seen_arrays: set = set()
+    for sub in ast.walk(fn):
+        if (isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load)
+                and sub.id in module_arrays and sub.id not in local
+                and sub.id not in seen_arrays):
+            seen_arrays.add(sub.id)
+            findings.append(Finding(
+                rule="RT003", file=path, line=sub.lineno,
+                message=(
+                    f"jitted function {fn.name!r} closes over "
+                    f"module-level jnp array {sub.id!r} (defined at line "
+                    f"{module_arrays[sub.id]}) — captured as a trace "
+                    f"constant: re-creating the module value recompiles "
+                    f"silently and the buffer pins device memory"),
+                hint=f"pass {sub.id!r} as a function argument instead"))
+        if isinstance(sub, ast.Call):
+            dotted = _dotted(sub.func)
+            if dotted and _is_impure(dotted):
+                findings.append(Finding(
+                    rule="RT004", file=path, line=sub.lineno,
+                    message=(
+                        f"{dotted}() inside jitted function {fn.name!r} "
+                        f"runs once at trace time and its result is "
+                        f"frozen into the compiled executable"),
+                    hint=("hoist the call to the host-stepped caller, or "
+                          "use jax.random with an explicitly threaded "
+                          "key")))
+    return findings
+
+
+def _is_impure(dotted: str) -> bool:
+    for pat in IMPURE_CALLS:
+        if pat.endswith("."):
+            if dotted.startswith(pat):
+                return True
+        elif dotted == pat:
+            return True
+    return False
+
+
+def run(paths: list) -> list:
+    """Pass entry point: lint every ``*.py`` under ``paths``."""
+    findings: list = []
+    for p in paths:
+        root = Path(p)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            if f.suffix == ".py":
+                findings.extend(check_file(str(f)))
+    return findings

@@ -1,0 +1,143 @@
+"""VMEM budget estimator (rules VM001–VM002).
+
+The Pallas relax kernels (:mod:`repro.kernels.relax`) keep their output
+accumulators and lookup tables fully VMEM-resident — a constant
+``index_map`` means Pallas revisits the same block across grid steps, so
+every full-array spec stays on-core for the whole launch.  That design
+is why the scatter-combine is fast, and also why it has a hard wall:
+TPU VMEM is ~16 MiB/core (``relax.VMEM_BUDGET_BYTES``), and a graph
+whose padded node/edge tables exceed the budget fails at compile time
+with an opaque allocation error — or, with autotuned block sizes
+(ROADMAP), at tuning time.
+
+This pass is the static feasibility oracle: it evaluates the kernels'
+declarative footprint model (``relax.kernel_vmem_blocks``) against a set
+of reference shapes and fails when a kernel cannot fit.
+
+* **VM001 — vmem budget overrun**: a kernel's resident blocks for a
+  reference shape exceed the budget.
+* **VM002 — misaligned block spec**: a tiling constant that is not a
+  multiple of the TPU lane width (128) — every BlockSpec built from it
+  pads up silently, wasting VMEM the estimator would not see.
+
+Reference shapes default to the repo's benchmark suite
+(:data:`repro.data.graphs.GRAPH_SUITE`) — the budget must hold for the
+graphs the docs claim to run.  :func:`estimate` / :func:`check_kernel`
+are importable for tests and for the autotuner to call with candidate
+shapes of its own.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+from repro.analysis.findings import Finding, RUNTIME_FILE
+
+PASS_NAME = "vmem"
+RULES = ("VM001", "VM002")
+
+#: TPU VPU lane width every last-dimension block size must divide into
+LANE = 128
+
+
+def reference_shapes() -> dict:
+    """``name -> (n, e)`` upper bounds for the benchmark suite graphs.
+
+    Derived from the generators' parameters (n = 2**scale or side²;
+    e = n · edge_factor, road ≈ 4n) — deliberately *upper* bounds, so
+    the static check is conservative without building any graph."""
+    from repro.data.graphs import GRAPH_SUITE
+    shapes = {}
+    for name, spec in GRAPH_SUITE.items():
+        kind = spec["kind"]
+        if kind == "road":
+            n = int(spec["side"]) ** 2
+            e = 4 * n
+        else:
+            n = 1 << int(spec["scale"])
+            e = n * int(spec["edge_factor"])
+        shapes[name] = (n, e)
+    return shapes
+
+
+def _anchor():
+    """(file, line) of the kernel module's footprint model."""
+    from repro.kernels import relax
+    try:
+        file = inspect.getsourcefile(relax) or RUNTIME_FILE
+        line = inspect.getsourcelines(relax.kernel_vmem_blocks)[1]
+    except (OSError, TypeError):
+        file, line = RUNTIME_FILE, 0
+    return file, line
+
+
+def estimate(kernel: str, *, n: int, f: int | None = None,
+             e: int | None = None, itemsize: int = 4) -> tuple:
+    """``(total_bytes, blocks)`` for one kernel at one shape."""
+    from repro.kernels import relax
+    blocks = relax.kernel_vmem_blocks(kernel, n=n, f=f, e=e,
+                                      itemsize=itemsize)
+    return sum(blocks.values()), blocks
+
+
+def check_kernel(kernel: str, *, n: int, f: int | None = None,
+                 e: int | None = None, itemsize: int = 4,
+                 budget: int | None = None,
+                 shape_name: str = "custom") -> list:
+    """VM001 for one kernel × shape; empty list when it fits."""
+    from repro.kernels import relax
+    if budget is None:
+        budget = relax.VMEM_BUDGET_BYTES
+    total, blocks = estimate(kernel, n=n, f=f, e=e, itemsize=itemsize)
+    if total <= budget:
+        return []
+    file, line = _anchor()
+    worst = max(blocks, key=blocks.get)
+    detail = ", ".join(f"{k}={v >> 10}KiB" for k, v in sorted(
+        blocks.items(), key=lambda kv: -kv[1]))
+    return [Finding(
+        rule="VM001",
+        message=(
+            f"kernel {kernel!r} at shape {shape_name!r} "
+            f"(n={n}, f={f}, e={e}) keeps {total} bytes resident in "
+            f"VMEM — over the {budget}-byte budget by "
+            f"{total - budget} ({detail})"),
+        file=file, line=line,
+        hint=(f"largest block is {worst!r}: shrink the graph shard "
+              f"(engine.run(..., shards=)), stream the table in chunked "
+              f"BlockSpecs instead of a constant index_map, or raise "
+              f"VMEM_BUDGET_BYTES if the target core really has more"))]
+
+
+def check_alignment() -> list:
+    """VM002 over the kernel module's tiling constants."""
+    from repro.kernels import relax
+    file, _ = _anchor()
+    findings = []
+    for const in ("TILE_C", "CHUNK"):
+        val = getattr(relax, const)
+        if val % LANE != 0:
+            findings.append(Finding(
+                rule="VM002",
+                message=(
+                    f"tiling constant {const}={val} is not a multiple of "
+                    f"the TPU lane width ({LANE}) — every block built "
+                    f"from it is silently padded up, so the footprint "
+                    f"model under-counts real VMEM use"),
+                file=file, line=0,
+                hint=f"make {const} a multiple of {LANE}"))
+    return findings
+
+
+def run(paths) -> list:
+    """The full VMEM pass: both kernels × every reference shape, plus
+    the alignment check.  ``paths`` is unused (the models are imported,
+    not parsed) but accepted for pass-framework uniformity."""
+    del paths
+    findings = check_alignment()
+    for shape_name, (n, e) in sorted(reference_shapes().items()):
+        findings.extend(check_kernel("lanes", n=n, shape_name=shape_name))
+        # WD's slot tables are bounded by the frontier cap ≤ n
+        findings.extend(check_kernel("wd", n=n, f=n, e=e,
+                                     shape_name=shape_name))
+    return findings

@@ -17,7 +17,6 @@ worst case E_loc so it cannot drop).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

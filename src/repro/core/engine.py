@@ -39,8 +39,8 @@ from repro.core import shard as _shard
 from repro.core.graph import CSRGraph, INF
 from repro.core.strategies import (
     BACKENDS, EdgeBased, FRONTIER_INIT, IterStats, NodeSplitting,
-    PALLAS_BACKEND, PRIORITY_SCHEDULE, SHARDABLE, StrategyBase, STRATEGIES,
-    make_strategy, register, strategy_capabilities)
+    PALLAS_BACKEND, PRIORITY_SCHEDULE, SHARDABLE, StrategyBase,
+    make_strategy)  # noqa: F401  (make_strategy re-exported: engine.make_strategy)
 
 #: work-ordering schedules engine.run/fixed_point/run_batch accept:
 #: "bsp" relaxes the whole frontier every iteration (bulk-synchronous,

@@ -439,6 +439,25 @@ class FusedPlan:
     static: dict               # threshold kwargs for _fixed_point
 
 
+def fused_kernel_name(cls) -> Optional[str]:
+    """The fused kernel a strategy *class* lowers to, or ``None``.
+
+    The class-level companion of :func:`_plan` (same precedence order),
+    usable without a set-up instance — the capability cross-checker
+    (:mod:`repro.analysis.capabilities`) uses it to decide whether a
+    declared ``SHARDABLE``/``PRIORITY_SCHEDULE`` flag is backed by an
+    actual lowering.  Keep the two in sync."""
+    for klass, kernel in ((AdaptiveStrategy, "AD"),
+                          (HierarchicalProcessing, "HP"),
+                          (NodeSplitting, "NS"),
+                          (EdgeBased, "EP"),
+                          (WorkloadDecomposition, "WD"),
+                          (NodeBased, "BS")):
+        if isinstance(cls, type) and issubclass(cls, klass):
+            return kernel
+    return None
+
+
 def _plan(strategy, state, graph: CSRGraph) -> FusedPlan:
     """Map a set-up strategy instance to its fused lowering.
 

@@ -109,6 +109,15 @@ class EdgeOp:
     #: every edge as light; delta-stepping still converges for monotone
     #: monoids, it just cannot defer any work (docs/scheduling.md).
     weight_additive: bool = False
+    #: optional lower bound of the operator's *value domain*.  The monoid
+    #: laws only need to hold for values the traversal can produce; an
+    #: operator whose identity is neutral only on a sub-range (e.g.
+    #: ``widest_path``: 0 is neutral for ``max`` over non-negative
+    #: capacities, which its bottleneck message never leaves) must
+    #: declare the bound so the contract checker
+    #: (:mod:`repro.analysis.contracts`) verifies the laws over the
+    #: domain actually promised.  ``None`` = the full dtype range.
+    value_min: Optional[int] = None
 
     def __post_init__(self):
         if self.combine not in _COMBINES:
@@ -185,10 +194,13 @@ min_label = EdgeOp(
 
 #: maximum bottleneck bandwidth: a path's capacity is its thinnest edge;
 #: keep the best capacity over all paths.  Sources start unbounded (INF);
-#: unreachable nodes keep capacity 0 (the identity of max).
+#: unreachable nodes keep capacity 0 (the identity of max *over
+#: non-negative capacities* — declared via ``value_min=0``; the
+#: bottleneck message is closed over that domain for the non-negative
+#: edge weights the graph generators produce).
 widest_path = EdgeOp(
     name="widest_path", combine="max", identity=0, source_value=INF,
-    message=_bottleneck_message)
+    message=_bottleneck_message, value_min=0)
 
 #: additive propagation: every firing node adds its count downstream.
 #: Exact source→node path counts on level-layered DAGs (each node fires
@@ -207,11 +219,31 @@ OPERATORS: dict[str, EdgeOp] = {
 
 
 def register_operator(op: EdgeOp) -> EdgeOp:
-    """Add a user-defined operator to :data:`OPERATORS` (name must be new)."""
+    """Add a user-defined operator to :data:`OPERATORS` (name must be new).
+
+    With the ``REPRO_CHECK_CONTRACTS`` environment variable set to a
+    non-empty value other than ``0``, the operator is additionally
+    verified against the monoid laws its declarations promise — the
+    :mod:`repro.analysis.contracts` pass, run at registration time —
+    and rejected with the findings when it breaks them.  Off by default
+    because the exhaustive int8-domain sweep costs a few hundred
+    milliseconds per operator (docs/analysis.md)."""
+    import os
+
     if not isinstance(op, EdgeOp):
         raise TypeError(f"{op!r} is not an EdgeOp")
     if op.name in OPERATORS:
         raise ValueError(f"operator {op.name!r} already registered")
+    if os.environ.get("REPRO_CHECK_CONTRACTS", "0") not in ("", "0"):
+        from repro.analysis import contracts
+
+        errors = [f for f in contracts.check_operator(op)
+                  if f.severity == "error"]
+        if errors:
+            detail = "; ".join(f"[{f.rule}] {f.message}" for f in errors)
+            raise ValueError(
+                f"operator {op.name!r} fails its declared contracts "
+                f"(REPRO_CHECK_CONTRACTS is set): {detail}")
     OPERATORS[op.name] = op
     return op
 

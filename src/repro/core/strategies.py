@@ -61,7 +61,6 @@ docs/backends.md.  Strategies advertise support via the
 from __future__ import annotations
 
 import dataclasses
-import time
 from functools import partial
 from typing import Any, Optional
 

@@ -18,7 +18,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 TILE_ROWS, TILE_COLS = 8, 128           # VPU vector registers

@@ -66,6 +66,62 @@ TILE_R, TILE_C = 8, 128          # VPU vector registers
 TILE = TILE_R * TILE_C           # work items per grid step
 CHUNK = 128                      # table chunk streamed per compare pass
 
+#: per-core VMEM capacity the block plans must fit in (TPU VMEM is
+#: ~16 MiB/core; see the Pallas guide).  The static feasibility oracle
+#: :mod:`repro.analysis.vmem` fails any kernel whose resident blocks
+#: exceed this, so block-size autotuning (ROADMAP) can reject a
+#: configuration before ever compiling it.
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+#: compare/select temporaries concurrently live during a
+#: :func:`_combine_pass` / :func:`_onehot_gather` chunk step, each a
+#: ``[TILE_R, TILE_C, CHUNK]`` block (``hit``, ``ok``, ``vals`` + the
+#: gather's ``sel``) — the scratch term of the footprint model below.
+_SCRATCH_BLOCKS = 4
+
+
+def kernel_vmem_blocks(kernel: str, *, n: int, f: int | None = None,
+                       e: int | None = None, itemsize: int = 4) -> dict:
+    """Per-grid-step VMEM-resident blocks of one kernel, in bytes.
+
+    The declarative footprint model backing the static budget check
+    (:mod:`repro.analysis.vmem`): every entry is one block a grid step
+    keeps resident — full-array ``BlockSpec`` inputs/outputs (constant
+    index_map ⇒ revisited, so resident for the whole launch), the
+    per-step lane tiles, and the broadcast-compare scratch.  Keep in
+    sync with the ``in_specs``/``out_specs`` of :func:`relax_lanes` and
+    :func:`wd_relax_lanes` above.
+
+    ``kernel`` is ``"lanes"`` or ``"wd"``; ``n``/``f``/``e`` are the
+    *unpadded* node / frontier-slot / edge counts (padding to CHUNK
+    happens here, exactly as the entry points do); ``itemsize`` is the
+    operator dtype's width (int32 ⇒ 4).
+    """
+    n_pad = _round_up(n, CHUNK)
+    blocks = {
+        "dist": n_pad * itemsize,            # full input, revisited
+        "proposal": n_pad * itemsize,        # full output accumulator
+        "updated": n_pad * 4,                # full output accumulator
+        "improve_tile": TILE * 4,            # per-step lane output tile
+        "scratch": _SCRATCH_BLOCKS * TILE * CHUNK * itemsize,
+    }
+    if kernel == "lanes":
+        # src/dst/valid int32 lane tiles + the weight tile in op dtype
+        blocks["lane_tiles"] = TILE * (3 * 4 + itemsize)
+    elif kernel == "wd":
+        if f is None or e is None:
+            raise ValueError("kernel 'wd' needs f= and e= shapes")
+        f_pad = _round_up(f, CHUNK)
+        e_pad = _round_up(e, CHUNK)
+        # prefix/exclusive/start/src_ids slot tables, full inputs
+        blocks["slot_tables"] = 4 * f_pad * 4
+        # CSR col (int32) + wt (op dtype), full inputs
+        blocks["edge_tables"] = e_pad * (4 + itemsize)
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}; expected "
+                         f"'lanes' or 'wd'")
+    return blocks
+
 
 def _round_up(n: int, m: int) -> int:
     return -(-max(int(n), 1) // m) * m

@@ -8,8 +8,6 @@ initialization, and smoke tests must keep seeing 1 device.
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P

@@ -18,7 +18,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHITECTURES, get_config
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import SHAPES
 from repro.launch.steps import build_serve_step
 from repro.models.model import LanguageModel

@@ -6,19 +6,17 @@ shape), plus abstract ``input_specs`` (ShapeDtypeStruct stand-ins — the
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.launch.mesh import adapt_pspec, adapt_pspec_tree, data_axes
+from repro.launch.mesh import adapt_pspec
 from repro.launch.shapes import ShapeSpec
 from repro.models.config import ModelConfig
 from repro.models.model import LanguageModel
-from repro.models.params import (ParamSpec, abstract_params, is_spec,
-                                 pspec_tree)
+from repro.models.params import ParamSpec, abstract_params, is_spec
 from repro.optim.adamw import AdamW
 from repro.optim.schedules import warmup_cosine
 

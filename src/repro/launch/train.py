@@ -20,7 +20,6 @@ import json
 import logging
 
 import jax
-import numpy as np
 
 from repro.configs import ARCHITECTURES, get_config
 from repro.data.pipeline import TokenPipeline

@@ -13,12 +13,10 @@ makes 61–72-layer × 512-device dry-runs tractable.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.models import attention as attn

@@ -19,7 +19,7 @@ cross-pod data axis.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

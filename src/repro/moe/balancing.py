@@ -29,7 +29,6 @@ static capacity to its upper edge.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

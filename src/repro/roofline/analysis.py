@@ -19,8 +19,6 @@ import dataclasses
 import re
 from typing import Optional
 
-import numpy as np
-
 # TPU v5e per chip
 HARDWARE = {
     "peak_flops": 197e12,      # bf16 FLOP/s

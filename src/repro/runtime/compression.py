@@ -13,8 +13,6 @@ the pjit path leaves the all-reduce to GSPMD.  Wire format is 1 byte/elem
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

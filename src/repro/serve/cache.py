@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Any, Optional
+from typing import Optional
 
 import numpy as np
 

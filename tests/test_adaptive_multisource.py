@@ -7,9 +7,8 @@ import pytest
 from repro.algos import bfs, bfs_batch, sssp, sssp_batch
 from repro.core import engine, multi_source
 from repro.core.graph import CSRGraph, INF
-from repro.core.strategies import (AdaptiveStrategy, StrategyBase,
-                                   STRATEGIES, choose_kernel, make_strategy,
-                                   register)
+from repro.core.strategies import (StrategyBase, STRATEGIES,
+                                   choose_kernel, make_strategy, register)
 from repro.data import (erdos_renyi_graph, graph500_graph, rmat_graph,
                         road_grid_graph)
 

@@ -1,0 +1,497 @@
+"""Tests for the static-analysis subsystem (``repro.analysis``).
+
+The contract under test (docs/analysis.md):
+
+* every pass flags its golden known-bad fixture with the right rule id
+  *and the right line* — a linter that points at the wrong line is worse
+  than none;
+* ``# repro: disable=RULE`` suppressions work at line and file scope,
+  and suppressed counts are reported (not silently dropped);
+* ``REPRO_CHECK_CONTRACTS`` turns the contract pass into a
+  registration-time gate;
+* the live ``src/repro`` tree is finding-free — the dogfooding
+  invariant CI enforces with ``python -m repro.analysis src/repro``.
+"""
+
+import json
+import textwrap
+
+import pytest
+
+import jax.numpy as jnp
+
+from repro.analysis import PASSES, apply_suppressions, get_pass, run_all
+from repro.analysis import capabilities as cap_pass
+from repro.analysis import contracts, retrace, vmem
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.findings import Finding, parse_suppressions
+from repro.core import operators
+from repro.core.graph import INF
+from repro.core.operators import EdgeOp
+from repro.core.strategies import (PALLAS_BACKEND, SHARDABLE, StrategyBase)
+
+from repro.analysis.__main__ import default_root
+
+SRC_ROOT = default_root()
+
+
+def _lint(tmp_path, source: str, name="fixture.py"):
+    """Write a dedented snippet and run the retrace pass over it."""
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(source), encoding="utf-8")
+    return f, retrace.check_file(str(f))
+
+
+def _line_of(source: str, needle: str) -> int:
+    """1-based line of the first line containing ``needle``."""
+    for i, line in enumerate(textwrap.dedent(source).splitlines(), 1):
+        if needle in line:
+            return i
+    raise AssertionError(f"{needle!r} not in fixture")
+
+
+# ---------------------------------------------------------------------------
+# retrace pass (RT001–RT004)
+# ---------------------------------------------------------------------------
+
+RT001_FIXTURE = """\
+    import jax
+    import jax.numpy as jnp
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("cap",))
+    def kernel(x, n, *, cap):
+        if n > 0:
+            x = x + 1
+        return x
+"""
+
+
+def test_rt001_missing_static_argname(tmp_path):
+    _, findings = _lint(tmp_path, RT001_FIXTURE)
+    assert [f.rule for f in findings] == ["RT001"]
+    f = findings[0]
+    assert f.line == _line_of(RT001_FIXTURE, "if n > 0")
+    assert "'n'" in f.message and "kernel" in f.message
+    assert f.severity == "error"
+
+
+def test_rt001_static_args_are_clean(tmp_path):
+    _, findings = _lint(tmp_path, """\
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("n",))
+        def kernel(x, n):
+            if n > 0:
+                x = x + 1
+            return x
+    """)
+    assert findings == []
+
+
+def test_rt001_is_none_branch_is_static_structure(tmp_path):
+    # None-ness is pytree structure: jax traces the None and the array
+    # variants separately, so `x is None` branches are legitimate
+    # (wd_relax_lanes' `wt is None` is the live example).
+    _, findings = _lint(tmp_path, """\
+        import jax
+
+        @jax.jit
+        def kernel(x, wt):
+            y = (x if wt is None else x * wt)
+            if wt is not None:
+                y = y + 1
+            return y
+    """)
+    assert findings == []
+
+
+def test_rt001_while_and_range_loops(tmp_path):
+    src = """\
+        import jax
+
+        @jax.jit
+        def kernel(x, steps):
+            for _ in range(steps):
+                x = x + 1
+            return x
+    """
+    _, findings = _lint(tmp_path, src)
+    assert [f.rule for f in findings] == ["RT001"]
+    assert findings[0].line == _line_of(src, "for _ in range")
+
+
+def test_rt002_unhashable_static_default(tmp_path):
+    src = """\
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("opts",))
+        def kernel(x, opts=[1, 2]):
+            return x
+    """
+    _, findings = _lint(tmp_path, src)
+    assert [f.rule for f in findings] == ["RT002"]
+    assert findings[0].line == _line_of(src, "opts=[1, 2]")
+
+
+def test_rt003_module_array_closure(tmp_path):
+    src = """\
+        import jax
+        import jax.numpy as jnp
+
+        TABLE = jnp.arange(128)
+
+        @jax.jit
+        def kernel(x):
+            return x + TABLE[0]
+    """
+    _, findings = _lint(tmp_path, src)
+    assert [f.rule for f in findings] == ["RT003"]
+    assert findings[0].line == _line_of(src, "x + TABLE")
+    assert "TABLE" in findings[0].message
+
+
+def test_rt004_impure_call_in_trace(tmp_path):
+    src = """\
+        import jax, time
+
+        @jax.jit
+        def kernel(x):
+            t0 = time.time()
+            return x + t0
+    """
+    _, findings = _lint(tmp_path, src)
+    assert [f.rule for f in findings] == ["RT004"]
+    assert findings[0].line == _line_of(src, "time.time()")
+
+
+def test_rt000_syntax_error(tmp_path):
+    _, findings = _lint(tmp_path, "def broken(:\n")
+    assert [f.rule for f in findings] == ["RT000"]
+
+
+def test_retrace_ignores_unjitted_functions(tmp_path):
+    _, findings = _lint(tmp_path, """\
+        import time
+
+        def host_driver(x, n):
+            if n > 0:          # host-stepped: branching is fine
+                x = x + 1
+            return x, time.time()
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# contracts pass (CT001–CT006)
+# ---------------------------------------------------------------------------
+
+def _op(**kw):
+    base = dict(name="t", combine="min", identity=INF, source_value=0,
+                message=lambda v, w: v + w)
+    base.update(kw)
+    return EdgeOp(**base)
+
+
+def test_ct_builtins_are_law_abiding():
+    for op in operators.OPERATORS.values():
+        assert contracts.check_operator(op) == [], op.name
+
+
+def test_ct001_wrong_identity():
+    rules = [f.rule for f in contracts.check_operator(_op(identity=7))]
+    assert "CT001" in rules
+
+
+def test_ct002_broken_associativity():
+    # The golden non-associative fixture: a too-strict activation gate
+    # ("only improvements by >1 fire") makes the *gated* relax step
+    # order-dependent — x=10 receiving (9, then 8) is not (8, then 9).
+    op = _op(update=lambda c, cur: c < cur - 1)
+    findings = contracts.check_operator(op)
+    rules = {f.rule for f in findings}
+    assert "CT002" in rules
+    ct002 = next(f for f in findings if f.rule == "CT002")
+    assert "order" in ct002.message
+    # anchored to the lambda's definition in *this* file
+    assert ct002.file.endswith("test_analysis.py")
+
+
+def test_ct003_inconsistent_activation():
+    op = _op(update=lambda c, cur: c <= cur)     # re-fires on equality
+    rules = {f.rule for f in contracts.check_operator(op)}
+    assert "CT003" in rules
+
+
+def test_ct004_broken_idempotence():
+    # A plain EdgeOp derives `idempotent` from its combine, so the law
+    # holds by construction; the realistic violation is a third-party
+    # subclass overriding the property — claiming re-delivery safety for
+    # an additive fold.  The checker calls the method, so it catches it.
+    class LyingOp(EdgeOp):
+        @property
+        def idempotent(self):
+            return True
+
+    op = LyingOp(name="t4", combine="add", identity=0, source_value=1,
+                 message=lambda v, w: v)
+    findings = contracts.check_operator(op)
+    assert "CT004" in {f.rule for f in findings}
+    ct004 = next(f for f in findings if f.rule == "CT004")
+    assert "re-delivering" in ct004.message
+
+
+def test_ct005_weight_additive_lie():
+    # copy-message: rank grows by 0, not by w — weight_additive is a lie
+    op = _op(message=lambda v, w: v, weight_additive=True)
+    rules = {f.rule for f in contracts.check_operator(op)}
+    assert "CT005" in rules
+
+
+def test_ct006_dtype_widening_message():
+    op = _op(message=lambda v, w: v + 0.5)
+    rules = {f.rule for f in contracts.check_operator(op)}
+    assert "CT006" in rules
+
+
+def test_value_min_restricts_domain():
+    # max with identity 0 is only neutral over non-negative values:
+    # undeclared -> CT001; declared value_min=0 -> clean (widest_path's
+    # live fix in this PR)
+    bad = EdgeOp(name="tmax", combine="max", identity=0, source_value=INF,
+                 message=lambda v, w: jnp.minimum(v, w))
+    assert "CT001" in {f.rule for f in contracts.check_operator(bad)}
+    good = EdgeOp(name="tmax2", combine="max", identity=0, source_value=INF,
+                  message=lambda v, w: jnp.minimum(v, w), value_min=0)
+    assert contracts.check_operator(good) == []
+
+
+def test_register_time_contract_gate(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECK_CONTRACTS", "1")
+    bad = EdgeOp(name="t_reject", combine="max", identity=7,
+                 source_value=0, message=lambda v, w: v)
+    with pytest.raises(ValueError, match="CT001"):
+        operators.register_operator(bad)
+    assert "t_reject" not in operators.OPERATORS
+    good = _op(name="t_accept")
+    try:
+        operators.register_operator(good)
+        assert "t_accept" in operators.OPERATORS
+    finally:
+        operators.OPERATORS.pop("t_accept", None)
+
+
+def test_register_knob_off_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_CHECK_CONTRACTS", raising=False)
+    bad = EdgeOp(name="t_unchecked", combine="max", identity=7,
+                 source_value=0, message=lambda v, w: v)
+    try:
+        operators.register_operator(bad)   # no gate without the knob
+        assert "t_unchecked" in operators.OPERATORS
+    finally:
+        operators.OPERATORS.pop("t_unchecked", None)
+
+
+# ---------------------------------------------------------------------------
+# capabilities pass (CP001–CP003)
+# ---------------------------------------------------------------------------
+
+def test_cp001_phantom_capability():
+    # The golden phantom-capability fixture: declares SHARDABLE but has
+    # no fused kernel, so no shard lowering can exist.
+    class Phantom(StrategyBase):
+        name = "phantom"
+        capabilities = frozenset({SHARDABLE})
+
+        def iterate(self, state, dist, updated_mask, count, **kw):
+            return dist, updated_mask, None
+
+    findings = cap_pass.check_strategy("phantom", Phantom)
+    assert [f.rule for f in findings] == ["CP001"]
+    assert "SHARDABLE" in findings[0].message
+    assert findings[0].file.endswith("test_analysis.py")
+
+
+def test_cp001_pallas_without_backend_param():
+    class NoBackend(StrategyBase):
+        name = "nobackend"
+        capabilities = frozenset({PALLAS_BACKEND})
+
+        def iterate(self, state, dist, updated_mask, count, *, op=None,
+                    record_degrees=False):
+            return dist, updated_mask, None
+
+    findings = cap_pass.check_strategy("nobackend", NoBackend)
+    assert [f.rule for f in findings] == ["CP001"]
+    assert "backend" in findings[0].message
+
+
+def test_cp003_unknown_flag():
+    class Unknown(StrategyBase):
+        name = "unknown"
+        capabilities = frozenset({"warp_speed"})
+
+        def iterate(self, state, dist, updated_mask, count, **kw):
+            return dist, updated_mask, None
+
+    findings = cap_pass.check_strategy("unknown", Unknown)
+    assert [f.rule for f in findings] == ["CP003"]
+    assert "warp_speed" in findings[0].message
+
+
+def test_cp002_undeclared_gate(tmp_path):
+    src = textwrap.dedent("""\
+        def gate(strategy):
+            if "warp_speed" in strategy.capabilities:
+                return True
+            return False
+    """)
+    f = tmp_path / "gate.py"
+    f.write_text(src, encoding="utf-8")
+    findings = cap_pass.check_file(f)
+    assert [f2.rule for f2 in findings] == ["CP002"]
+    assert findings[0].line == 2
+
+
+def test_cp002_known_constant_gates_are_clean(tmp_path):
+    src = textwrap.dedent("""\
+        from repro.core.strategies import SHARDABLE
+
+        def gate(strategy):
+            return SHARDABLE in strategy.capabilities
+    """)
+    f = tmp_path / "gate.py"
+    f.write_text(src, encoding="utf-8")
+    assert cap_pass.check_file(f) == []
+
+
+def test_cp_registry_is_clean():
+    assert cap_pass.check_registry() == []
+
+
+# ---------------------------------------------------------------------------
+# vmem pass (VM001–VM002)
+# ---------------------------------------------------------------------------
+
+def test_vm001_oversized_block_spec():
+    # The golden over-budget fixture: 8M nodes keeps ~3 full int32
+    # node-tables resident — far past the 16 MiB budget.
+    findings = vmem.check_kernel("lanes", n=8 << 20, shape_name="huge")
+    assert [f.rule for f in findings] == ["VM001"]
+    assert "huge" in findings[0].message
+    assert findings[0].file.endswith("kernels/relax.py")
+    assert findings[0].line > 0
+
+
+def test_vm001_wd_edge_tables_dominate():
+    findings = vmem.check_kernel("wd", n=1 << 15, f=1 << 15, e=4 << 20,
+                                 shape_name="dense")
+    assert [f.rule for f in findings] == ["VM001"]
+    assert "edge_tables" in findings[0].hint or "edge_tables" in \
+        findings[0].message
+
+
+def test_vmem_estimate_matches_block_sum():
+    total, blocks = vmem.estimate("wd", n=1000, f=500, e=8000)
+    assert total == sum(blocks.values())
+    assert set(blocks) >= {"dist", "proposal", "updated", "scratch",
+                           "slot_tables", "edge_tables"}
+
+
+def test_vmem_suite_shapes_fit():
+    # the benchmark suite must stay compilable — this is the live
+    # feasibility invariant `python -m repro.analysis` enforces
+    assert vmem.run([]) == []
+
+
+def test_vmem_custom_budget():
+    assert vmem.check_kernel("lanes", n=1024, budget=1 << 10)
+
+
+# ---------------------------------------------------------------------------
+# suppressions + reporters + CLI
+# ---------------------------------------------------------------------------
+
+def test_parse_suppressions_line_and_file():
+    sup = parse_suppressions(textwrap.dedent("""\
+        # repro: disable=CT001
+        x = 1
+        y = 2  # repro: disable=RT001,RT003
+    """))
+    assert sup.file_rules == {"CT001"}
+    assert sup.line_rules == {3: frozenset({"RT001", "RT003"})}
+
+
+def test_line_suppression_silences_one_finding(tmp_path):
+    src = RT001_FIXTURE.replace("if n > 0:",
+                                "if n > 0:  # repro: disable=RT001")
+    f, findings = _lint(tmp_path, src)
+    assert [x.rule for x in findings] == ["RT001"]   # pass still reports
+    kept, suppressed = apply_suppressions(findings)
+    assert kept == [] and suppressed == 1
+
+
+def test_file_suppression_silences_whole_file(tmp_path):
+    src = "# repro: disable=RT001\n" + textwrap.dedent(RT001_FIXTURE)
+    f, findings = _lint(tmp_path, src)
+    kept, suppressed = apply_suppressions(findings)
+    assert kept == [] and suppressed == 1
+
+
+def test_suppression_is_rule_specific(tmp_path):
+    src = "# repro: disable=RT004\n" + textwrap.dedent(RT001_FIXTURE)
+    f, findings = _lint(tmp_path, src)
+    kept, suppressed = apply_suppressions(findings)
+    assert [x.rule for x in kept] == ["RT001"] and suppressed == 0
+
+
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(RT001_FIXTURE), encoding="utf-8")
+    out_json = tmp_path / "report.json"
+    rc = cli_main([str(bad), "--passes=retrace", "--format=json",
+                   "--output", str(out_json)])
+    assert rc == 1
+    report = json.loads(out_json.read_text(encoding="utf-8"))
+    assert report["total"] == 1
+    assert report["counts"] == {"RT001": 1}
+    assert report["findings"][0]["rule"] == "RT001"
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["counts"] == report["counts"]
+
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n", encoding="utf-8")
+    assert cli_main([str(clean), "--passes=retrace"]) == 0
+
+
+def test_cli_no_suppress_audit_mode(tmp_path):
+    src = "# repro: disable=RT001\n" + textwrap.dedent(RT001_FIXTURE)
+    bad = tmp_path / "bad.py"
+    bad.write_text(src, encoding="utf-8")
+    assert cli_main([str(bad), "--passes=retrace"]) == 0
+    assert cli_main([str(bad), "--passes=retrace", "--no-suppress"]) == 1
+
+
+def test_finding_rejects_bad_severity():
+    with pytest.raises(ValueError):
+        Finding(rule="X", message="m", file="f", line=1, severity="fatal")
+
+
+def test_pass_registry_exposes_rules():
+    for name in PASSES:
+        mod = get_pass(name)
+        assert mod.PASS_NAME == name
+        assert mod.RULES
+
+
+# ---------------------------------------------------------------------------
+# the dogfooding invariant: the live tree is finding-free
+# ---------------------------------------------------------------------------
+
+def test_live_tree_is_finding_free():
+    findings = run_all([SRC_ROOT])
+    kept, _ = apply_suppressions(findings)
+    assert kept == [], "\n".join(
+        f"{f.location()}: [{f.rule}] {f.message}" for f in kept)

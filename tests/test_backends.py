@@ -21,8 +21,7 @@ from repro.algos.widest import reference_widest
 from repro.core import engine, fused
 from repro.core.graph import CSRGraph
 from repro.core.strategies import (
-    BACKENDS, PALLAS_BACKEND, STRATEGIES, StrategyBase,
-    strategy_capabilities)
+    BACKENDS, PALLAS_BACKEND, StrategyBase, strategy_capabilities)
 from repro.data import rmat_graph, road_grid_graph
 
 ALL_STRATEGIES = ["BS", "EP", "WD", "NS", "HP", "AD"]

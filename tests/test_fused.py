@@ -9,7 +9,7 @@ whole traversal (and recompiling nothing when shapes repeat).
 import numpy as np
 import pytest
 
-from repro.algos import bfs, sssp, sssp_batch
+from repro.algos import bfs, sssp_batch
 from repro.core import engine, fused
 from repro.core.graph import CSRGraph, INF
 from repro.data import (erdos_renyi_graph, graph500_graph, rmat_graph,

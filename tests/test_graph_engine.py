@@ -6,7 +6,7 @@ import pytest
 
 from repro.algos import bfs, sssp, connected_components
 from repro.core import engine
-from repro.core.graph import CSRGraph, INF, graph_stats
+from repro.core.graph import CSRGraph, INF
 from repro.data import (erdos_renyi_graph, graph500_graph, rmat_graph,
                         road_grid_graph)
 

@@ -133,7 +133,6 @@ def test_relax_lanes_matches_apply_relax(opname, n, L):
 def test_relax_lanes_custom_update_predicate():
     """Operators overriding ``update`` evaluate it per (lane, dst) pair
     inside the kernel — same bit-exact contract as the defaults."""
-    import jax.numpy as jnp2
     from repro.core import operators
     from repro.core.strategies import _apply_relax
     from repro.kernels import relax

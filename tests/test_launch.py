@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import get_config
-from repro.launch.mesh import adapt_pspec, data_axes, make_host_mesh
+from repro.launch.mesh import adapt_pspec, make_host_mesh
 from repro.launch.shapes import SHAPES, ShapeSpec, skip_reason
 from repro.models.model import LanguageModel
 from repro.models.params import init_params

@@ -30,9 +30,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine, operators, priority, worklist
-from repro.core.graph import CSRGraph, INF
+from repro.core.graph import INF
 from repro.core.strategies import (
-    PRIORITY_SCHEDULE, STRATEGIES, strategy_capabilities)
+    PRIORITY_SCHEDULE, strategy_capabilities)
 from repro.data import rmat_graph, road_grid_graph
 
 from test_differential import host_fixed_point, single_source_init

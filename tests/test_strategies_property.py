@@ -7,7 +7,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import engine
-from repro.core.graph import CSRGraph, INF
+from repro.core.graph import CSRGraph
 from repro.core.node_split import find_mdt, split_graph
 from repro.core.worklist import bucket, run_fill
 from repro.moe.balancing import calibrate_capacity

@@ -5,7 +5,6 @@ import dataclasses
 import os
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

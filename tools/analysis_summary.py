@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Ratchet on ``repro.analysis`` finding counts: the count may not grow.
+
+Usage::
+
+    python -m repro.analysis src/repro --format=json --output report.json
+    python tools/analysis_summary.py report.json                # compare
+    python tools/analysis_summary.py report.json --update       # re-baseline
+
+Compares a JSON findings report against the checked-in baseline
+(``experiments/analysis_baseline.json``) and fails when any rule's count
+— or the suppression count — exceeds it.  Shrinking counts print a
+reminder to re-baseline (``--update`` rewrites the baseline from the
+report) so the ratchet keeps tightening.  Standard library only, like
+``tools/check_links.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE = Path(__file__).resolve().parent.parent / "experiments" \
+    / "analysis_baseline.json"
+
+
+def load_counts(path: Path) -> dict:
+    data = json.loads(path.read_text(encoding="utf-8"))
+    return {"counts": dict(data.get("counts", {})),
+            "suppressed": int(data.get("suppressed", 0))}
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("report", type=Path,
+                        help="JSON report from python -m repro.analysis "
+                             "--format=json --output")
+    parser.add_argument("--baseline", type=Path, default=BASELINE)
+    parser.add_argument("--update", action="store_true",
+                        help="rewrite the baseline from the report")
+    args = parser.parse_args(argv)
+
+    current = load_counts(args.report)
+    if args.update:
+        args.baseline.write_text(
+            json.dumps(current, indent=2, sort_keys=True) + "\n",
+            encoding="utf-8")
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    base = load_counts(args.baseline)
+    grew, shrank = [], []
+    rules = sorted(set(base["counts"]) | set(current["counts"]))
+    for rule in rules:
+        b = base["counts"].get(rule, 0)
+        c = current["counts"].get(rule, 0)
+        if c > b:
+            grew.append(f"{rule}: {b} -> {c}")
+        elif c < b:
+            shrank.append(f"{rule}: {b} -> {c}")
+    if current["suppressed"] > base["suppressed"]:
+        grew.append(f"suppressed: {base['suppressed']} -> "
+                    f"{current['suppressed']}")
+    elif current["suppressed"] < base["suppressed"]:
+        shrank.append(f"suppressed: {base['suppressed']} -> "
+                      f"{current['suppressed']}")
+
+    total = sum(current["counts"].values())
+    print(f"{total} finding(s), {current['suppressed']} suppressed "
+          f"(baseline: {sum(base['counts'].values())} finding(s), "
+          f"{base['suppressed']} suppressed)")
+    if grew:
+        print("RATCHET VIOLATION — finding counts grew:", file=sys.stderr)
+        for line in grew:
+            print(f"  {line}", file=sys.stderr)
+        print("fix the findings (or suppress with justification and "
+              "re-baseline via --update in the same change)",
+              file=sys.stderr)
+        return 1
+    if shrank:
+        print("counts shrank — tighten the ratchet with --update:")
+        for line in shrank:
+            print(f"  {line}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

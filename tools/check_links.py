@@ -24,6 +24,12 @@ LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 CODE_SPAN_RE = re.compile(r"`[^`]*`")
 FENCE_RE = re.compile(r"^(```|~~~)")
 
+#: benchmark artifact references (``experiments/bench/fig14_… .json``).
+#: These live in code spans, so they escape LINK_RE — matched against
+#: the *raw* line instead, and resolved against the markdown file's
+#: directory or the repo root (docs refer to them root-relative).
+BENCH_RE = re.compile(r"experiments/bench/fig[\w.-]*\.json")
+
 
 def iter_markdown(paths: list[str]):
     for p in paths:
@@ -52,7 +58,22 @@ def check_file(md: Path) -> list[str]:
                 continue
             if not (md.parent / rel).exists():
                 errors.append(f"{md}:{lineno}: broken link -> {target}")
+        for ref in BENCH_RE.findall(line):
+            candidates = (md.parent / ref, _repo_root(md) / ref)
+            if not any(c.exists() for c in candidates):
+                errors.append(
+                    f"{md}:{lineno}: missing benchmark artifact -> {ref} "
+                    f"(regenerate it, or drop the stale reference)")
     return errors
+
+
+def _repo_root(md: Path) -> Path:
+    """Nearest ancestor of ``md`` containing ``experiments/`` (falls
+    back to the current directory, where CI runs the script from)."""
+    for parent in md.resolve().parents:
+        if (parent / "experiments").is_dir():
+            return parent
+    return Path(".")
 
 
 def main(argv: list[str]) -> int:
