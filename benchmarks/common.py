@@ -15,6 +15,7 @@ relationship the paper's hardware imposed.
 from __future__ import annotations
 
 import json
+import math
 import os
 
 import numpy as np
@@ -80,11 +81,47 @@ def run_strategy(graph, strategy_name: str, *, source: int | None = None,
     return best
 
 
+#: traversal clocks below this resolution are timer noise: a rate
+#: computed from them is an artefact of the clock, not the kernel
+MTEPS_MIN_SECONDS = 1e-7
+
+def safe_mteps(res, *, min_seconds: float = MTEPS_MIN_SECONDS):
+    """``res.mteps``, or ``None`` when the rate would be meaningless.
+
+    ``RunResult.mteps`` guards the exact-zero clock, but a
+    sub-resolution traversal time (a one-iteration run on a tiny graph,
+    or a timer that under-reports) still divides real edges by noise and
+    prints an absurd rate into the JSON a later figure regression would
+    ratchet on.  ``None`` keeps the row — status, iterations and edge
+    counts stay usable — while marking the rate itself absent; the CSV
+    writers render it ``n/a`` (:func:`fmt_rate`) and the JSON writers
+    store a null.
+
+    Accepts anything with ``edges_relaxed`` and a traversal clock —
+    ``RunResult`` (``traversal_seconds``) or ``BatchRunResult``
+    (``total_seconds``; the batch result has no setup/traversal split)."""
+    seconds = getattr(res, "traversal_seconds", None)
+    if seconds is None:
+        seconds = res.total_seconds
+    seconds = float(seconds)
+    edges = int(res.edges_relaxed)
+    if not math.isfinite(seconds) or seconds < min_seconds or edges <= 0:
+        return None
+    return edges / seconds / 1e6
+
+
+def fmt_rate(value, spec: str = ".2f") -> str:
+    """Format a possibly-``None`` rate for the derived CSV field."""
+    return "n/a" if value is None else format(value, spec)
+
+
 def save_result(name: str, payload) -> None:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
         json.dump(payload, f, indent=1, default=str)
 
 
-def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
+def csv_line(name: str, us_per_call, derived: str = "") -> str:
+    if us_per_call is None:
+        us_per_call = float("nan")
     return f"{name},{us_per_call:.1f},{derived}"

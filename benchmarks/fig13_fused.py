@@ -27,7 +27,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import csv_line, run_strategy, save_result
+from benchmarks.common import (csv_line, fmt_rate, run_strategy,
+                               safe_mteps, save_result)
 from repro.data import graph500_graph, rmat_graph, road_grid_graph
 
 #: one power-law, one Kronecker, one bounded-degree family (paper suite).
@@ -72,8 +73,8 @@ def run(verbose: bool = True):
                 "edges_relaxed": fused.edges_relaxed,
                 "stepped_s": stepped.traversal_seconds,
                 "fused_s": fused.traversal_seconds,
-                "mteps_stepped": stepped.mteps,
-                "mteps_fused": fused.mteps,
+                "mteps_stepped": safe_mteps(stepped),
+                "mteps_fused": safe_mteps(fused),
                 "speedup": (stepped.traversal_seconds / fused.traversal_seconds
                             if fused.traversal_seconds > 0 else 0.0),
                 "stepped_dispatch_share": dispatch_share,
@@ -82,8 +83,8 @@ def run(verbose: bool = True):
     save_result("fig13_fused", {"rows": rows})
     lines = []
     for r in rows:
-        derived = (f"mteps_fused={r['mteps_fused']:.2f};"
-                   f"mteps_stepped={r['mteps_stepped']:.2f};"
+        derived = (f"mteps_fused={fmt_rate(r['mteps_fused'])};"
+                   f"mteps_stepped={fmt_rate(r['mteps_stepped'])};"
                    f"speedup={r['speedup']:.2f}x;"
                    f"stepped_dispatch_share={r['stepped_dispatch_share']:.2f}")
         lines.append(csv_line(

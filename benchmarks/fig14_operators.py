@@ -27,7 +27,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import csv_line, run_strategy, save_result
+from benchmarks.common import (csv_line, fmt_rate, run_strategy,
+                               safe_mteps, save_result)
 from repro.data import rmat_graph, road_grid_graph
 
 #: sized like fig13 (dispatch overhead and operator cost are both
@@ -66,16 +67,16 @@ def run(verbose: bool = True):
                     "edges_relaxed": stepped.edges_relaxed,
                     "stepped_s": stepped.traversal_seconds,
                     "fused_s": fused.traversal_seconds,
-                    "mteps_stepped": stepped.mteps,
-                    "mteps_fused": fused.mteps,
+                    "mteps_stepped": safe_mteps(stepped),
+                    "mteps_fused": safe_mteps(fused),
                 })
 
     save_result("fig14_operators", {"rows": rows})
     lines = []
     for r in rows:
         derived = (f"op={r['operator']};"
-                   f"mteps_stepped={r['mteps_stepped']:.2f};"
-                   f"mteps_fused={r['mteps_fused']:.2f};"
+                   f"mteps_stepped={fmt_rate(r['mteps_stepped'])};"
+                   f"mteps_fused={fmt_rate(r['mteps_fused'])};"
                    f"iters={r['iterations']}")
         lines.append(csv_line(
             f"fig14_operators/{r['graph']}/{r['operator']}/{r['strategy']}",

@@ -37,7 +37,7 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import csv_line, save_result
+from benchmarks.common import csv_line, fmt_rate, save_result
 
 SHARD_COUNTS = [1, 2, 4, 8]
 
@@ -48,6 +48,7 @@ import sys
 sys.path.insert(0, "src")
 import json
 import numpy as np
+from benchmarks.common import safe_mteps
 from repro.core import engine, shard
 from repro.data import rmat_graph, road_grid_graph
 
@@ -83,7 +84,7 @@ for gname, make in GRAPHS.items():
             "edges_relaxed": best.edges_relaxed,
             "traversal_s": best.traversal_seconds,
             "setup_s": best.setup_seconds,
-            "mteps": best.mteps,
+            "mteps": safe_mteps(best),
             "cut_share": info.cut_share,
             "halo_bytes": info.halo_bytes,
             "replica_exchange_bytes": 4 * g.num_nodes * s_count,
@@ -106,7 +107,7 @@ def run(verbose: bool = True):
     save_result("fig15_sharded", payload)
     lines = []
     for r in payload["rows"]:
-        derived = (f"mteps={r['mteps']:.2f};"
+        derived = (f"mteps={fmt_rate(r['mteps'])};"
                    f"cut_share={r['cut_share']:.3f};"
                    f"halo_kb={r['halo_bytes'] / 1024:.1f};"
                    f"edge_imbalance={r['edge_imbalance']:.2f}")

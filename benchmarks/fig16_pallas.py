@@ -24,7 +24,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import csv_line, run_strategy, save_result
+from benchmarks.common import (csv_line, fmt_rate, run_strategy,
+                               safe_mteps, save_result)
 from repro.data import rmat_graph, road_grid_graph
 
 #: one power-law, one bounded-degree family (paper suite), scaled to the
@@ -62,8 +63,8 @@ def run(verbose: bool = True):
                 "edges_relaxed": xla.edges_relaxed,
                 "xla_s": xla.traversal_seconds,
                 "pallas_s": pallas.traversal_seconds,
-                "mteps_xla": xla.mteps,
-                "mteps_pallas": pallas.mteps,
+                "mteps_xla": safe_mteps(xla),
+                "mteps_pallas": safe_mteps(pallas),
                 "pallas_over_xla": (
                     pallas.traversal_seconds / xla.traversal_seconds
                     if xla.traversal_seconds > 0 else 0.0),
@@ -73,8 +74,8 @@ def run(verbose: bool = True):
     save_result("fig16_pallas", {"rows": rows})
     lines = []
     for r in rows:
-        derived = (f"mteps_xla={r['mteps_xla']:.2f};"
-                   f"mteps_pallas={r['mteps_pallas']:.2f};"
+        derived = (f"mteps_xla={fmt_rate(r['mteps_xla'])};"
+                   f"mteps_pallas={fmt_rate(r['mteps_pallas'])};"
                    f"pallas_over_xla={r['pallas_over_xla']:.2f}x;"
                    f"parity={r['parity']}")
         lines.append(csv_line(

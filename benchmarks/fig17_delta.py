@@ -30,7 +30,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import csv_line, get_graph, run_strategy, save_result
+from benchmarks.common import (csv_line, fmt_rate, get_graph,
+                               run_strategy, safe_mteps, save_result)
 
 #: the high-diameter vs low-diameter pair of the main suite
 FIG17_GRAPHS = ["road", "rmat"]
@@ -66,8 +67,8 @@ def run(verbose: bool = True):
             "edges_delta": delta.edges_relaxed,
             "bsp_s": bsp.traversal_seconds,
             "delta_s": delta.traversal_seconds,
-            "mteps_bsp": bsp.mteps,
-            "mteps_delta": delta.mteps,
+            "mteps_bsp": safe_mteps(bsp),
+            "mteps_delta": safe_mteps(delta),
             "iteration_ratio": (delta.iterations / bsp.iterations
                                 if bsp.iterations else 0.0),
             "parity": "identical-dist",
@@ -81,8 +82,8 @@ def run(verbose: bool = True):
                    f"ratio={r['iteration_ratio']:.3f};"
                    f"edges_delta/bsp="
                    f"{r['edges_delta'] / max(r['edges_bsp'], 1):.2f};"
-                   f"mteps_bsp={r['mteps_bsp']:.2f};"
-                   f"mteps_delta={r['mteps_delta']:.2f};"
+                   f"mteps_bsp={fmt_rate(r['mteps_bsp'])};"
+                   f"mteps_delta={fmt_rate(r['mteps_delta'])};"
                    f"parity={r['parity']}")
         lines.append(csv_line(
             f"fig17/{r['graph']}/{r['strategy']}",

@@ -10,8 +10,9 @@ useful kernel time vs strategy overhead.  Validates:
 from __future__ import annotations
 
 
-from benchmarks.common import (BENCH_GRAPHS, csv_line, get_graph,
-                               run_strategy, save_result)
+from benchmarks.common import (BENCH_GRAPHS, csv_line, fmt_rate,
+                               get_graph, run_strategy, safe_mteps,
+                               save_result)
 
 STRATEGIES = ["BS", "EP", "WD", "NS", "HP"]
 
@@ -30,7 +31,7 @@ def run(verbose: bool = True):
                     "overhead_s": res.overhead_seconds,
                     "iterations": res.iterations,
                     "edges_relaxed": res.edges_relaxed,
-                    "mteps": res.mteps,
+                    "mteps": safe_mteps(res),
                     "state_bytes": res.state_bytes,
                 })
             except MemoryError as exc:   # EP on Graph500 (paper §IV)
@@ -53,7 +54,8 @@ def run(verbose: bool = True):
             lines.append(csv_line(
                 f"fig7_sssp/{r['graph']}/{r['strategy']}",
                 r["total_s"] * 1e6,
-                f"kernel_us={r['kernel_s']*1e6:.0f};mteps={r['mteps']:.2f}"))
+                f"kernel_us={r['kernel_s']*1e6:.0f};"
+                f"mteps={fmt_rate(r['mteps'])}"))
         else:
             lines.append(csv_line(
                 f"fig7_sssp/{r['graph']}/{r['strategy']}", float("nan"),

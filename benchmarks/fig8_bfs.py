@@ -6,7 +6,7 @@ while EP still wins, and HP pays off only at Graph500 scale."""
 from __future__ import annotations
 
 from benchmarks.common import (BENCH_GRAPHS, csv_line, get_graph,
-                               run_strategy, save_result)
+                               run_strategy, safe_mteps, save_result)
 
 STRATEGIES = ["BS", "EP", "WD", "NS", "HP"]
 
@@ -24,7 +24,7 @@ def run(verbose: bool = True):
                     "kernel_s": res.kernel_seconds,
                     "overhead_s": res.overhead_seconds,
                     "iterations": res.iterations,
-                    "mteps": res.mteps,
+                    "mteps": safe_mteps(res),
                 })
             except MemoryError as exc:
                 rows.append({"graph": gname, "strategy": s,

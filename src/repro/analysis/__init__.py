@@ -9,7 +9,7 @@ Pallas kernels' VMEM block budgets.  This package checks them *before*
 execution, so a third-party operator or strategy is held to the same
 contract as the built-ins on day one (docs/analysis.md).
 
-Four passes, each a module with ``PASS_NAME``, ``RULES`` and
+Five passes, each a module with ``PASS_NAME``, ``RULES`` and
 ``run(paths) -> list[Finding]``:
 
 =============  =======================  ==================================
@@ -19,6 +19,7 @@ pass           rules                    checks
 ``contracts``  CT001–CT006              EdgeOp monoid laws (int8 domain)
 ``capabilities`` CP001–CP003            capability flags vs. lowerings
 ``vmem``       VM001–VM002              Pallas VMEM block budgets
+``schedules``  SC001–SC003              Schedule fields vs. consumers
 =============  =======================  ==================================
 
 Run ``python -m repro.analysis [paths]`` (defaults to ``src/repro``);
@@ -40,6 +41,7 @@ PASSES = {
     "contracts": "repro.analysis.contracts",
     "capabilities": "repro.analysis.capabilities",
     "vmem": "repro.analysis.vmem",
+    "schedules": "repro.analysis.schedules",
 }
 
 

@@ -37,6 +37,7 @@ from repro.core import operators
 from repro.core import priority as _priority
 from repro.core import shard as _shard
 from repro.core.graph import CSRGraph, INF
+from repro.core.schedule import Schedule
 from repro.core.strategies import (
     BACKENDS, EdgeBased, FRONTIER_INIT, IterStats, NodeSplitting,
     PALLAS_BACKEND, PRIORITY_SCHEDULE, SHARDABLE, StrategyBase,
@@ -89,6 +90,11 @@ class RunResult:
     #: True when shards ran ahead asynchronously between halo combines
     #: (engine.run(..., async_shards=True) — docs/scheduling.md)
     async_shards: bool = False
+    #: the resolved work-assignment :class:`repro.core.schedule.Schedule`
+    #: the run executed under (concrete MDT etc.) — NOT the work-ordering
+    #: string above; see docs/schedules.md for the naming split.  None on
+    #: degenerate no-edge runs.
+    work_schedule: Optional[Schedule] = None
 
     def __post_init__(self):
         if self.relax_rounds is None:
@@ -355,7 +361,8 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
             edges_relaxed=edges, iter_stats=[], strategy=strategy.name,
             state_bytes=state_bytes, mode="fused", shards=shards or 1,
             backend=backend, schedule=schedule, delta=delta,
-            relax_rounds=rounds, async_shards=async_shards)
+            relax_rounds=rounds, async_shards=async_shards,
+            work_schedule=getattr(strategy, "resolved_schedule", None))
 
     iter_stats: list[IterStats] = []
     kernel_s = 0.0
@@ -436,7 +443,8 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         strategy=strategy.name,
         state_bytes=state_bytes, mode="stepped",
         backend=backend, schedule=schedule, delta=delta,
-        relax_rounds=rounds)
+        relax_rounds=rounds,
+        work_schedule=getattr(strategy, "resolved_schedule", None))
 
 
 def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,

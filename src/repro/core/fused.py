@@ -88,6 +88,7 @@ from jax import lax
 from repro.core import operators
 from repro.core.graph import CSRGraph
 from repro.core.operators import EdgeOp
+from repro.core.schedule import DEFAULT_SCHEDULE, Schedule
 from repro.core.strategies import (
     AdaptiveStrategy, EdgeBased, HierarchicalProcessing, NodeBased,
     NodeSplitting, WorkloadDecomposition, _apply_relax, _edge_weight,
@@ -129,7 +130,8 @@ def _limb_add(hi, lo, e):
 
 def _merge_path_relax(g: CSRGraph, dist, updated, work, cursor=None, *,
                       op: EdgeOp = operators.shortest_path,
-                      backend: str = "xla"):
+                      backend: str = "xla",
+                      sched: Schedule = DEFAULT_SCHEDULE):
     """One synchronous merge-path relax over ``E`` edge lanes.
 
     ``work[n]`` is how many edges node ``n`` contributes; each lane
@@ -151,7 +153,7 @@ def _merge_path_relax(g: CSRGraph, dist, updated, work, cursor=None, *,
         src_ids = jnp.arange(g.num_nodes, dtype=jnp.int32)
         prop, upd, _ = relax.wd_relax_lanes(
             dist, prefix, exclusive, start, src_ids, g.col, g.wt,
-            cap_work=g.num_edges, op=op)
+            cap_work=g.num_edges, op=op, **relax.tile_kwargs(sched))
         return (relax.apply_proposal(dist, prop, op),
                 updated | upd, total)
     k = jnp.arange(g.num_edges, dtype=jnp.int32)
@@ -168,13 +170,14 @@ def _merge_path_relax(g: CSRGraph, dist, updated, work, cursor=None, *,
 
 
 def _bs_step(g: CSRGraph, dist, mask, *,
-             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla",
+             sched: Schedule = DEFAULT_SCHEDULE):
     """Dense BS: every node lane walks its own adjacency list in lockstep.
 
     Column ``d`` relaxes the ``d``-th edge of every frontier node — the
     same relax batches, in the same order, as ``bs_relax`` over a
     compacted frontier, so intra-iteration propagation is identical."""
-    relax = relax_fn(backend)
+    relax = relax_fn(backend, sched)
     deg = _masked_degrees(g, mask)
     base = g.row_ptr[:-1]
     nodes = jnp.arange(g.num_nodes, dtype=jnp.int32)
@@ -199,7 +202,8 @@ def _bs_step(g: CSRGraph, dist, mask, *,
 
 
 def _wd_step(g: CSRGraph, dist, mask, *,
-             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla",
+             sched: Schedule = DEFAULT_SCHEDULE):
     """Dense WD: merge-path over the frontier's edges, ``E`` lanes.
 
     One synchronous ``_merge_path_relax`` over the masked degrees — same
@@ -207,29 +211,32 @@ def _wd_step(g: CSRGraph, dist, mask, *,
     deg = _masked_degrees(g, mask)
     updated = jnp.zeros_like(mask)
     dist, updated, total = _merge_path_relax(g, dist, updated, deg, op=op,
-                                             backend=backend)
+                                             backend=backend, sched=sched)
     return dist, updated, total
 
 
-def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int,
+def _hp_step(g: CSRGraph, dist, mask, *, sched: Schedule = DEFAULT_SCHEDULE,
              op: EdgeOp = operators.shortest_path, backend: str = "xla"):
     """Dense HP: the stepped driver's hybrid, on device.
 
-    ``count <= switch_threshold`` → straight WD (one synchronous pass);
-    otherwise MDT-wide tiles in an inner while_loop until the live sublist
-    shrinks to the threshold, then a cursor-aware WD tail over the
+    ``count <= sched.switch_threshold`` → straight WD (one synchronous
+    pass); otherwise MDT-wide tiles in an inner while_loop until the live
+    sublist shrinks to the threshold, then a cursor-aware WD tail over the
     remainder.  Chunk boundaries — and therefore intra-iteration value
     propagation — match ``HierarchicalProcessing.iterate`` exactly."""
+    mdt = sched.mdt or 1
+    switch_threshold = sched.switch_threshold
     deg = _masked_degrees(g, mask)
     count = jnp.sum(mask.astype(jnp.int32))
     n, e = g.num_nodes, g.num_edges
     base = g.row_ptr[:-1]
     nodes = jnp.arange(n, dtype=jnp.int32)
 
-    relax = relax_fn(backend)
+    relax = relax_fn(backend, sched)
 
     def small(dist):
-        dist, updated, _ = _wd_step(g, dist, mask, op=op, backend=backend)
+        dist, updated, _ = _wd_step(g, dist, mask, op=op, backend=backend,
+                                    sched=sched)
         return dist, updated
 
     def big(dist):
@@ -265,7 +272,8 @@ def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int,
         # nodes, all remaining edges in one synchronous pass)
         rem = jnp.where(mask, jnp.maximum(deg - cursor, 0), 0)
         dist, updated, _ = _merge_path_relax(g, dist, updated, rem, cursor,
-                                             op=op, backend=backend)
+                                             op=op, backend=backend,
+                                             sched=sched)
         return dist, updated
 
     dist, updated = lax.cond(count <= switch_threshold, small, big, dist)
@@ -273,7 +281,8 @@ def _hp_step(g: CSRGraph, dist, mask, *, mdt: int, switch_threshold: int,
 
 
 def _ep_step(g: CSRGraph, edge_src, dist, mask, *,
-             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla",
+             sched: Schedule = DEFAULT_SCHEDULE):
     """Dense EP: all ``E`` edge lanes, valid where the source is live.
 
     The dense analogue of a chunked edge worklist — deduplicated by
@@ -281,57 +290,80 @@ def _ep_step(g: CSRGraph, edge_src, dist, mask, *,
     valid = mask[edge_src]
     eidx = jnp.arange(g.num_edges, dtype=jnp.int32)
     updated = jnp.zeros_like(mask)
-    dist, updated, _ = relax_fn(backend)(
+    dist, updated, _ = relax_fn(backend, sched)(
         dist, updated, edge_src, g.col, _edge_weight(g, eidx), valid, op=op)
     return dist, updated, jnp.sum(valid.astype(jnp.int32))
 
 
 def _ns_step(g2: CSRGraph, child_parent, dist, mask, *,
-             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla",
+             sched: Schedule = DEFAULT_SCHEDULE):
     """Dense NS: mirror parent attributes onto children (the
     ``ns_activate`` gather — operator-generic, see strategies.py), then
     dense BS on the split graph."""
     dist = dist[child_parent]
     mask = mask | mask[child_parent]
-    return _bs_step(g2, dist, mask, op=op, backend=backend)
+    return _bs_step(g2, dist, mask, op=op, backend=backend, sched=sched)
 
 
-def _ad_step(g: CSRGraph, dist, mask, *, mdt: int, small_frontier: int,
-             imbalance_threshold: float, hp_edges_threshold: int,
-             switch_threshold: int,
-             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
-    """On-device evaluation of ``choose_kernel``'s decision structure.
+def _ad_step(g: CSRGraph, dist, mask, *, sched: Schedule = DEFAULT_SCHEDULE,
+             op: EdgeOp = operators.shortest_path, backend: str = "xla",
+             coeffs=None):
+    """On-device kernel selection for one AD iteration.
 
     Frontier statistics (count, degree sum, max degree, imbalance =
     max/mean per-node work) produce a branch index for ``lax.switch``
     over the dense BS/WD/HP bodies.  Returns the index so the caller can
     tally the kernel schedule in the loop carry.
 
-    The mean/imbalance arithmetic is float32 (x64 is off), and the
-    stepped ``AdaptiveStrategy.iterate`` computes its imbalance with the
-    SAME float32 op order so the two selectors cannot disagree on a
-    threshold within one rounding step — keep them in lockstep."""
+    Two selectors, chosen at trace time:
+
+    * ``coeffs is None`` — the fixed arXiv:1911.09135 decision tree on
+      ``sched``'s thresholds.  The mean/imbalance arithmetic is float32
+      (x64 is off), and the stepped ``AdaptiveStrategy.iterate`` computes
+      its imbalance with the SAME float32 op order so the two selectors
+      cannot disagree on a threshold within one rounding step — keep them
+      in lockstep.
+    * ``coeffs`` a ``[3, 3]`` float32 array — the measured cost model
+      (:mod:`repro.core.costmodel`): predicted seconds
+      ``a + b·degree_sum + c·count`` per kernel in ``_AD_KERNEL_ORDER``
+      order, ``argmin`` picks.  Same float32 op order as the host-side
+      ``CostModel.choose`` — same lockstep rule.  Degenerate frontiers
+      (no edges / empty mask) still take BS on both selectors."""
+    mdt = sched.mdt or 1
     deg = _masked_degrees(g, mask)
     count = jnp.sum(mask.astype(jnp.int32))
     degree_sum = jnp.sum(deg)
     max_degree = jnp.max(deg)
-    mean = degree_sum.astype(jnp.float32) / jnp.maximum(
-        count, 1).astype(jnp.float32)
-    imbalance = jnp.where(mean > 0,
-                          max_degree.astype(jnp.float32) / mean,
-                          jnp.float32(1.0))
-    take_bs = ((degree_sum == 0) | (count == 0)
-               | ((count <= small_frontier)
-                  & (imbalance <= jnp.float32(imbalance_threshold))))
-    take_hp = (max_degree > mdt) & (degree_sum >= hp_edges_threshold)
-    idx = jnp.where(take_bs, 0, jnp.where(take_hp, 2, 1)).astype(jnp.int32)
+    degenerate = (degree_sum == 0) | (count == 0)
+    if coeffs is None:
+        mean = degree_sum.astype(jnp.float32) / jnp.maximum(
+            count, 1).astype(jnp.float32)
+        imbalance = jnp.where(mean > 0,
+                              max_degree.astype(jnp.float32) / mean,
+                              jnp.float32(1.0))
+        take_bs = (degenerate
+                   | ((count <= sched.small_frontier)
+                      & (imbalance
+                         <= jnp.float32(sched.imbalance_threshold))))
+        take_hp = ((max_degree > mdt)
+                   & (degree_sum >= sched.hp_edges_threshold))
+        idx = jnp.where(take_bs, 0,
+                        jnp.where(take_hp, 2, 1)).astype(jnp.int32)
+    else:
+        es = degree_sum.astype(jnp.float32)
+        cn = count.astype(jnp.float32)
+        costs = coeffs[:, 0] + coeffs[:, 1] * es + coeffs[:, 2] * cn
+        idx = jnp.where(degenerate, 0,
+                        jnp.argmin(costs).astype(jnp.int32))
 
     dist, updated, edges = lax.switch(
         idx,
-        [lambda d: _bs_step(g, d, mask, op=op, backend=backend),
-         lambda d: _wd_step(g, d, mask, op=op, backend=backend),
-         lambda d: _hp_step(g, d, mask, mdt=mdt,
-                            switch_threshold=switch_threshold, op=op,
+        [lambda d: _bs_step(g, d, mask, op=op, backend=backend,
+                            sched=sched),
+         lambda d: _wd_step(g, d, mask, op=op, backend=backend,
+                            sched=sched),
+         lambda d: _hp_step(g, d, mask, sched=sched, op=op,
                             backend=backend)],
         dist)
     return dist, updated, edges, idx
@@ -353,28 +385,28 @@ def _count_key(kernel: str, backend: str) -> str:
 
 
 @partial(jax.jit, static_argnames=(
-    "kernel", "max_iterations", "mdt", "small_frontier",
-    "imbalance_threshold", "hp_edges_threshold", "switch_threshold", "op",
-    "backend"))
+    "kernel", "max_iterations", "sched", "op", "backend", "measured"))
 def _fixed_point(g: CSRGraph, aux, dist, mask, *, kernel: str,
-                 max_iterations: int, mdt: int = 1,
-                 small_frontier: int = 512,
-                 imbalance_threshold: float = 4.0,
-                 hp_edges_threshold: int = 1 << 15,
-                 switch_threshold: int = 1024,
+                 max_iterations: int,
+                 sched: Schedule = DEFAULT_SCHEDULE,
                  op: EdgeOp = operators.shortest_path,
-                 backend: str = "xla"):
+                 backend: str = "xla", measured: bool = False):
     """Whole traversal, one dispatch.
 
     ``aux`` is the kernel's side table: per-edge source ids for ``EP``,
-    the child→parent map for ``NS``, a 1-element dummy otherwise.  ``op``
-    is the (static) edge operator defining the relax semantics, and
-    ``backend`` picks the relax lowering (XLA gather/scatter vs the
-    Pallas fused scatter-combine — same chunk schedule, bit-identical
-    results).  The carry is ``(it, dist, mask, edges_hi, edges_lo,
-    kernel_counts)`` — the edge total rides in a two-limb int32
-    accumulator (``_limb_add``) so it stays exact past 2^31;
-    ``kernel_counts`` only moves for ``AD``."""
+    the child→parent map for ``NS``, the ``[3, 3]`` cost-model
+    coefficient array for measured ``AD`` (``measured=True``), a
+    1-element dummy otherwise.  ``sched`` is the whole work-assignment
+    :class:`~repro.core.schedule.Schedule` as ONE static argument —
+    frozen and hashable, so equal schedules share a compiled executable
+    and a changed field is a deliberate recompile.  ``op`` is the
+    (static) edge operator defining the relax semantics, and ``backend``
+    picks the relax lowering (XLA gather/scatter vs the Pallas fused
+    scatter-combine — same chunk schedule, bit-identical results).  The
+    carry is ``(it, dist, mask, edges_hi, edges_lo, kernel_counts)`` —
+    the edge total rides in a two-limb int32 accumulator (``_limb_add``)
+    so it stays exact past 2^31; ``kernel_counts`` only moves for
+    ``AD``."""
     # Python side effect ⇒ counts compilations, keyed per backend so the
     # XLA cache entry observably survives backend switches
     TRACE_COUNTS[_count_key(kernel, backend)] += 1
@@ -394,26 +426,23 @@ def _fixed_point(g: CSRGraph, aux, dist, mask, *, kernel: str,
         it, dist, mask, e_hi, e_lo, kcounts = c
         if kernel == "BS":
             dist, new_mask, e = _bs_step(g, dist, mask, op=op,
-                                         backend=backend)
+                                         backend=backend, sched=sched)
         elif kernel == "WD":
             dist, new_mask, e = _wd_step(g, dist, mask, op=op,
-                                         backend=backend)
+                                         backend=backend, sched=sched)
         elif kernel == "HP":
-            dist, new_mask, e = _hp_step(
-                g, dist, mask, mdt=mdt, switch_threshold=switch_threshold,
-                op=op, backend=backend)
+            dist, new_mask, e = _hp_step(g, dist, mask, sched=sched,
+                                         op=op, backend=backend)
         elif kernel == "EP":
             dist, new_mask, e = _ep_step(g, aux, dist, mask, op=op,
-                                         backend=backend)
+                                         backend=backend, sched=sched)
         elif kernel == "NS":
             dist, new_mask, e = _ns_step(g, aux, dist, mask, op=op,
-                                         backend=backend)
+                                         backend=backend, sched=sched)
         elif kernel == "AD":
             dist, new_mask, e, idx = _ad_step(
-                g, dist, mask, mdt=mdt, small_frontier=small_frontier,
-                imbalance_threshold=imbalance_threshold,
-                hp_edges_threshold=hp_edges_threshold,
-                switch_threshold=switch_threshold, op=op, backend=backend)
+                g, dist, mask, sched=sched, op=op, backend=backend,
+                coeffs=aux if measured else None)
             kcounts = kcounts.at[idx].add(1)
         else:  # pragma: no cover - guarded by _plan
             raise ValueError(f"unknown fused kernel {kernel!r}")
@@ -435,8 +464,10 @@ class FusedPlan:
     """How to run one strategy as a single fused dispatch."""
     kernel: str
     graph: CSRGraph            # graph the loop runs on (split graph for NS)
-    aux: Optional[jax.Array]   # EP edge sources / NS child_parent
-    static: dict               # threshold kwargs for _fixed_point
+    aux: Optional[jax.Array]   # EP edge sources / NS child_parent /
+    #                            measured-AD cost coefficients
+    static: dict               # static kwargs for _fixed_point: the
+    #                            resolved Schedule (+ measured for AD v2)
 
 
 def fused_kernel_name(cls) -> Optional[str]:
@@ -458,26 +489,38 @@ def fused_kernel_name(cls) -> Optional[str]:
     return None
 
 
+def _sched_of(strategy) -> Schedule:
+    """The schedule a fused lowering should run: the instance's resolved
+    one (concrete MDT), falling back to the declared / default schedule
+    for third-party strategies that skip ``StrategyBase.__init__``."""
+    sched = getattr(strategy, "resolved_schedule", None)
+    if sched is None:
+        sched = getattr(strategy, "schedule", None)
+    return sched if isinstance(sched, Schedule) else DEFAULT_SCHEDULE
+
+
 def _plan(strategy, state, graph: CSRGraph) -> FusedPlan:
     """Map a set-up strategy instance to its fused lowering.
 
     Raises ``ValueError`` for strategies without one (e.g. user-registered
     strategies whose ``iterate`` is host-stepped only)."""
     if isinstance(strategy, AdaptiveStrategy):
-        hp = strategy._kernels["HP"]
-        return FusedPlan("AD", graph, None, dict(
-            mdt=int(strategy.mdt_value),
-            small_frontier=int(strategy.small_frontier),
-            imbalance_threshold=float(strategy.imbalance_threshold),
-            hp_edges_threshold=int(strategy.hp_edges_threshold),
-            switch_threshold=int(hp.switch_threshold)))
+        static = dict(sched=_sched_of(strategy))
+        model = getattr(strategy, "cost_model", None)
+        if model is not None:
+            # measured AD (cost-model v2): the fitted [3, 3] coefficient
+            # array rides in the aux slot; `measured` flips _ad_step's
+            # selector at trace time
+            static["measured"] = True
+            return FusedPlan("AD", graph,
+                             jnp.asarray(model.coeff_array()), static)
+        return FusedPlan("AD", graph, None, static)
     if isinstance(strategy, HierarchicalProcessing):
-        return FusedPlan("HP", graph, None, dict(
-            mdt=int(strategy.mdt_value),
-            switch_threshold=int(strategy.switch_threshold)))
+        return FusedPlan("HP", graph, None, dict(sched=_sched_of(strategy)))
     if isinstance(strategy, NodeSplitting):
         sg = strategy.split_info
-        return FusedPlan("NS", sg.graph, sg.child_parent, {})
+        return FusedPlan("NS", sg.graph, sg.child_parent,
+                         dict(sched=_sched_of(strategy)))
     if isinstance(strategy, EdgeBased):
         if not strategy.chunked:
             # the unchunked per-edge push (duplicate worklist entries,
@@ -488,11 +531,12 @@ def _plan(strategy, state, graph: CSRGraph) -> FusedPlan:
                 "EP with chunked=False has no fused lowering "
                 "(dense frontiers are deduplicated by construction); "
                 "use mode='stepped'")
-        return FusedPlan("EP", graph, state.src, {})
+        return FusedPlan("EP", graph, state.src,
+                         dict(sched=_sched_of(strategy)))
     if isinstance(strategy, WorkloadDecomposition):
-        return FusedPlan("WD", graph, None, {})
+        return FusedPlan("WD", graph, None, dict(sched=_sched_of(strategy)))
     if isinstance(strategy, NodeBased):
-        return FusedPlan("BS", graph, None, {})
+        return FusedPlan("BS", graph, None, dict(sched=_sched_of(strategy)))
     raise ValueError(
         f"strategy {strategy.name!r} has no fused lowering; "
         f"use mode='stepped'")
@@ -530,11 +574,13 @@ def run_fixed_point(graph: CSRGraph, state: Any, strategy, dist0, mask0, *,
 # batched multi-source fixed point (K queries, zero host syncs)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("max_iterations", "op", "backend"))
+@partial(jax.jit, static_argnames=("max_iterations", "op", "backend",
+                                   "sched"))
 def _batch_fixed_point(g: CSRGraph, dist_b, mask_b, *,
                        max_iterations: int,
                        op: EdgeOp = operators.shortest_path,
-                       backend: str = "xla"):
+                       backend: str = "xla",
+                       sched: Schedule = DEFAULT_SCHEDULE):
     """All K queries to their fixed points in one dispatch.
 
     The dense WD step vmapped over the source axis inside one while_loop
@@ -551,7 +597,8 @@ def _batch_fixed_point(g: CSRGraph, dist_b, mask_b, *,
     def body(c):
         it, dist_b, mask_b, e_hi, e_lo = c
         dist_b, mask_b, e = jax.vmap(
-            lambda d, m: _wd_step(g, d, m, op=op, backend=backend))(
+            lambda d, m: _wd_step(g, d, m, op=op, backend=backend,
+                                  sched=sched))(
             dist_b, mask_b)
         # fold the K per-row totals one _limb_add at a time (each row is
         # < 2^31, but even the per-row remainders could wrap a plain
@@ -571,11 +618,12 @@ def _batch_fixed_point(g: CSRGraph, dist_b, mask_b, *,
 def run_batch_fixed_point(graph: CSRGraph, dist_b, mask_b, *,
                           op: EdgeOp = operators.shortest_path,
                           max_iterations: int = 100000,
-                          backend: str = "xla"):
+                          backend: str = "xla",
+                          sched: Schedule = DEFAULT_SCHEDULE):
     """Host wrapper for :func:`_batch_fixed_point` (dispatch-counted)."""
     DISPATCH_COUNTS[_count_key("batch", backend)] += 1
     dist_b, it, e_hi, e_lo = _batch_fixed_point(
         graph, dist_b, mask_b, max_iterations=max_iterations,
-        op=operators.resolve(op), backend=backend)
+        op=operators.resolve(op), backend=backend, sched=sched)
     jax.block_until_ready(dist_b)
     return dist_b, int(it), int(e_hi) * _LIMB + int(e_lo)

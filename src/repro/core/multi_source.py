@@ -54,6 +54,7 @@ import numpy as np
 from repro.core import operators
 from repro.core.graph import CSRGraph
 from repro.core.operators import EdgeOp
+from repro.core.schedule import DEFAULT_SCHEDULE, Schedule
 from repro.core.strategies import IterStats, wd_relax
 from repro.core.worklist import bucket, compact_mask
 
@@ -105,23 +106,26 @@ class BatchRunResult:
         return self.sources.shape[0] / self.total_seconds
 
 
-@partial(jax.jit, static_argnames=("cap", "cap_work", "op", "backend"))
+@partial(jax.jit, static_argnames=("cap", "cap_work", "op", "backend",
+                                   "sched"))
 def batched_wd_relax(g: CSRGraph, dist_b, mask_b, *, cap: int,
                      cap_work: int,
                      op: EdgeOp = operators.shortest_path,
-                     backend: str = "xla"):
+                     backend: str = "xla",
+                     sched: Schedule = DEFAULT_SCHEDULE):
     """One relax iteration for all K sources: vmap of compact + WD relax.
 
     ``cap`` (frontier slots) and ``cap_work`` (edge lanes) are shared by
     the whole batch — the largest per-source requirement, bucketed.  The
     edge operator rides into the vmapped body as a static closure, so all
     K rows relax under identical semantics; ``backend`` picks the relax
-    lowering per row (docs/backends.md)."""
+    lowering per row and ``sched`` the work-assignment schedule
+    (docs/backends.md, docs/schedules.md)."""
     def one(dist, mask):
         frontier = compact_mask(mask, cap)
         cursor = jnp.zeros((cap,), jnp.int32)
         return wd_relax(g, dist, frontier, cursor, cap_work=cap_work, op=op,
-                        backend=backend)
+                        backend=backend, sched=sched)
 
     return jax.vmap(one)(dist_b, mask_b)
 
@@ -157,7 +161,8 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
               partition: str = "degree",
               backend: str = "xla", schedule: str = "bsp",
               delta: Optional[int] = None,
-              pad_to: Optional[int] = None) -> BatchRunResult:
+              pad_to: Optional[int] = None,
+              work_schedule: Optional[Schedule] = None) -> BatchRunResult:
     """Fixed-point driver over K sources at once.
 
     Semantics match K independent ``engine.run`` calls exactly (same
@@ -181,6 +186,9 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
     source) so differently-sized batches share one compiled [P, N]
     executable — the serving tier's K-bucketing (docs/serving.md);
     ``BatchRunResult.pad_lanes`` counts the synthetic trailing rows.
+    ``work_schedule`` supplies the work-assignment
+    :class:`~repro.core.schedule.Schedule` (worklist floor, tile/chunk
+    shapes — docs/schedules.md); default is the pre-extraction constants.
     """
     if mode not in ("stepped", "fused"):
         raise ValueError(
@@ -235,13 +243,14 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
                               backend=backend, schedule=schedule,
                               delta=delta, pad_lanes=pad_lanes)
 
+    sched = work_schedule if work_schedule is not None else DEFAULT_SCHEDULE
     t0 = time.perf_counter()
     dist_b, mask_b = init_batch(n, jnp.asarray(sources), op=op)
 
     if schedule == "delta":
         from repro.core import priority
         from repro.core.strategies import make_strategy
-        wd = make_strategy("WD")
+        wd = make_strategy("WD", schedule=sched)
         dplan = priority.plan_delta(wd, wd.setup(graph), graph, op=op,
                                     delta=delta)
         dist_b, iterations, rounds, edges = priority.run_batch_fixed_point(
@@ -273,7 +282,7 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
         from repro.core import fused
         dist_b, iterations, edges = fused.run_batch_fixed_point(
             graph, dist_b, mask_b, op=op, max_iterations=max_iterations,
-            backend=backend)
+            backend=backend, sched=sched)
         total_s = time.perf_counter() - t0
         return BatchRunResult(dist=np.asarray(dist_b), sources=sources,
                               iterations=iterations, total_seconds=total_s,
@@ -293,11 +302,11 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
             break
         # per-source edge totals; the batch dispatches at the largest
         totals = mask_np.astype(np.int64) @ degrees.astype(np.int64)
-        cap = bucket(widest)
-        cap_work = bucket(int(totals.max()))
+        cap = bucket(widest, sched.min_bucket)
+        cap_work = bucket(int(totals.max()), sched.min_bucket)
         dist_b, mask_b = batched_wd_relax(graph, dist_b, mask_b,
                                           cap=cap, cap_work=cap_work, op=op,
-                                          backend=backend)
+                                          backend=backend, sched=sched)
         jax.block_until_ready(dist_b)
         edges += int(totals.sum())
         iter_stats.append(IterStats(frontier_size=widest,

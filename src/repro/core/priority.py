@@ -81,24 +81,32 @@ from repro.core.fused import (
     _hp_step, _limb_add, _ns_step, _plan, _wd_step)
 from repro.core.graph import CSRGraph
 from repro.core.operators import EdgeOp
+from repro.core.schedule import DEFAULT_SCHEDULE, Schedule
 from repro.core.strategies import PRIORITY_SCHEDULE
 
 #: Δ = multiplier × mean edge weight when the caller does not pass one.
 #: Small multiples of the mean keep buckets populated enough to relax in
 #: parallel while still collapsing the iteration count on high-diameter
-#: graphs; see docs/scheduling.md for tuning guidance.
+#: graphs; see docs/scheduling.md for tuning guidance.  The per-run knob
+#: is ``Schedule.delta_multiplier``; this is its default.
 DELTA_WEIGHT_MULTIPLIER = 4
 
 
-def auto_delta(graph: CSRGraph) -> int:
-    """Default bucket width: ``DELTA_WEIGHT_MULTIPLIER × mean(w)``.
+def auto_delta(graph: CSRGraph,
+               multiplier: int = DELTA_WEIGHT_MULTIPLIER) -> int:
+    """Default bucket width: ``multiplier × mean(w)``, clamped to Δ ≥ 1.
 
     Unweighted graphs have unit weights, so the default is the bare
-    multiplier (Δ=4: every edge light, buckets 4 BFS levels wide)."""
+    multiplier (Δ=4: every edge light, buckets 4 BFS levels wide).  The
+    clamp matters on zero-/uniform-weight inputs: without it a
+    zero-mean weight array would yield Δ=0, degenerating delta-stepping
+    into one bucket per distinct distance (and ``bucket_index`` would
+    divide by zero)."""
+    multiplier = max(1, int(multiplier))
     if graph.wt is None or graph.num_edges == 0:
-        return DELTA_WEIGHT_MULTIPLIER
+        return multiplier
     mean = float(np.asarray(graph.wt).mean())
-    return max(1, int(round(DELTA_WEIGHT_MULTIPLIER * mean)))
+    return max(1, int(round(multiplier * mean)))
 
 
 def _edge_subgraph(g: CSRGraph, keep: np.ndarray) -> CSRGraph:
@@ -149,10 +157,14 @@ def plan_delta(strategy, state, graph: CSRGraph, *,
     """Lower a set-up strategy to its delta-stepping plan.
 
     Reuses the fused lowering (:func:`repro.core.fused._plan`) for the
-    kernel name, phase graph (the split graph for NS) and threshold
-    statics, then splits that graph's edges at Δ.  Operators without
+    kernel name, phase graph (the split graph for NS) and schedule
+    static, then splits that graph's edges at Δ.  Δ resolution:
+    explicit ``delta`` argument > ``Schedule.delta`` > :func:`auto_delta`
+    with ``Schedule.delta_multiplier``.  Operators without
     :attr:`EdgeOp.weight_additive` get an all-light split — correct for
-    any monotone monoid, just with nothing to defer."""
+    any monotone monoid, just with nothing to defer.  The measured AD
+    selector (cost-model v2) is fused-BSP only; delta phases keep the
+    fixed decision tree."""
     op = operators.resolve(op)
     if PRIORITY_SCHEDULE not in type(strategy).capabilities:
         raise ValueError(
@@ -165,8 +177,16 @@ def plan_delta(strategy, state, graph: CSRGraph, *,
             f"has combine={op.combine!r} (docs/scheduling.md)")
     fplan = _plan(strategy, state, graph)
     g = fplan.graph
+    static = dict(fplan.static)
+    aux = fplan.aux
+    if static.pop("measured", None):
+        # measured AD rides its coefficients in the aux slot — the delta
+        # phases use the fixed tree, so drop both
+        aux = None
+    sched = static.get("sched", DEFAULT_SCHEDULE)
     if delta is None:
-        delta = auto_delta(graph)
+        delta = (sched.delta if sched.delta is not None
+                 else auto_delta(graph, sched.delta_multiplier))
     delta = int(delta)
     if delta < 1:
         raise ValueError(f"delta must be >= 1, got {delta}")
@@ -178,7 +198,7 @@ def plan_delta(strategy, state, graph: CSRGraph, *,
         gl, gh = g, None               # alias: bit-parity with BSP for free
     else:
         gl, gh = _edge_subgraph(g, light), _edge_subgraph(g, ~light)
-    return DeltaPlan(fplan.kernel, gl, gh, fplan.aux, fplan.static, delta)
+    return DeltaPlan(fplan.kernel, gl, gh, aux, static, delta)
 
 
 # ---------------------------------------------------------------------------
@@ -186,9 +206,7 @@ def plan_delta(strategy, state, graph: CSRGraph, *,
 # ---------------------------------------------------------------------------
 
 def _phase(g: CSRGraph, aux, dist, cur, *, kernel: str, op: EdgeOp,
-           backend: str, mdt: int = 1, small_frontier: int = 512,
-           imbalance_threshold: float = 4.0,
-           hp_edges_threshold: int = 1 << 15, switch_threshold: int = 1024):
+           backend: str, sched: Schedule = DEFAULT_SCHEDULE):
     """One phase = one dense-mask relax of ``cur`` over ``g``'s edges.
 
     Exactly the fused step kernels, pointed at the light or heavy
@@ -198,21 +216,17 @@ def _phase(g: CSRGraph, aux, dist, cur, *, kernel: str, op: EdgeOp,
         # static guard: HP's MDT tiles index g.col, which is empty here
         return dist, jnp.zeros_like(cur), jnp.int32(0)
     if kernel == "BS":
-        return _bs_step(g, dist, cur, op=op, backend=backend)
+        return _bs_step(g, dist, cur, op=op, backend=backend, sched=sched)
     if kernel == "WD":
-        return _wd_step(g, dist, cur, op=op, backend=backend)
+        return _wd_step(g, dist, cur, op=op, backend=backend, sched=sched)
     if kernel == "HP":
-        return _hp_step(g, dist, cur, mdt=mdt,
-                        switch_threshold=switch_threshold, op=op,
-                        backend=backend)
+        return _hp_step(g, dist, cur, sched=sched, op=op, backend=backend)
     if kernel == "NS":
-        return _ns_step(g, aux, dist, cur, op=op, backend=backend)
+        return _ns_step(g, aux, dist, cur, op=op, backend=backend,
+                        sched=sched)
     if kernel == "AD":
         dist, updated, e, _idx = _ad_step(
-            g, dist, cur, mdt=mdt, small_frontier=small_frontier,
-            imbalance_threshold=imbalance_threshold,
-            hp_edges_threshold=hp_edges_threshold,
-            switch_threshold=switch_threshold, op=op, backend=backend)
+            g, dist, cur, sched=sched, op=op, backend=backend)
         return dist, updated, e
     raise ValueError(f"kernel {kernel!r} has no delta-stepping phase")
 
@@ -266,34 +280,23 @@ def _epoch(gl, gh, aux, dist, mask, delta, *, kernel: str, heavy: bool,
     return dist, mask, b, rounds, e_hi, e_lo
 
 
-_STATIC_NAMES = ("kernel", "heavy", "op", "backend", "mdt", "small_frontier",
-                 "imbalance_threshold", "hp_edges_threshold",
-                 "switch_threshold")
+_STATIC_NAMES = ("kernel", "heavy", "op", "backend", "sched")
 
 
 @partial(jax.jit, static_argnames=_STATIC_NAMES)
 def _delta_epoch(gl, gh, aux, dist, mask, delta, *, kernel: str, heavy: bool,
-                 op: EdgeOp, backend: str = "xla", mdt: int = 1,
-                 small_frontier: int = 512, imbalance_threshold: float = 4.0,
-                 hp_edges_threshold: int = 1 << 15,
-                 switch_threshold: int = 1024):
+                 op: EdgeOp, backend: str = "xla",
+                 sched: Schedule = DEFAULT_SCHEDULE):
     TRACE_COUNTS[_count_key(f"delta-epoch:{kernel}", backend)] += 1
     return _epoch(gl, gh, aux, dist, mask, delta, kernel=kernel, heavy=heavy,
-                  op=op, backend=backend, mdt=mdt,
-                  small_frontier=small_frontier,
-                  imbalance_threshold=imbalance_threshold,
-                  hp_edges_threshold=hp_edges_threshold,
-                  switch_threshold=switch_threshold)
+                  op=op, backend=backend, sched=sched)
 
 
 @partial(jax.jit, static_argnames=_STATIC_NAMES + ("max_iterations",))
 def _delta_fixed_point(gl, gh, aux, dist, mask, delta, *, kernel: str,
                        heavy: bool, max_iterations: int, op: EdgeOp,
-                       backend: str = "xla", mdt: int = 1,
-                       small_frontier: int = 512,
-                       imbalance_threshold: float = 4.0,
-                       hp_edges_threshold: int = 1 << 15,
-                       switch_threshold: int = 1024):
+                       backend: str = "xla",
+                       sched: Schedule = DEFAULT_SCHEDULE):
     """Whole delta-stepping traversal, one dispatch (fused mode).
 
     Carry ``(it, dist, mask, e_hi, e_lo, rounds)``: ``it`` counts bucket
@@ -308,10 +311,7 @@ def _delta_fixed_point(gl, gh, aux, dist, mask, delta, *, kernel: str,
         it, dist, mask, e_hi, e_lo, rounds = c
         dist, mask, _b, r, eh, el = _epoch(
             gl, gh, aux, dist, mask, delta, kernel=kernel, heavy=heavy,
-            op=op, backend=backend, mdt=mdt, small_frontier=small_frontier,
-            imbalance_threshold=imbalance_threshold,
-            hp_edges_threshold=hp_edges_threshold,
-            switch_threshold=switch_threshold)
+            op=op, backend=backend, sched=sched)
         e_hi, e_lo = _limb_add(e_hi + eh, e_lo, el)
         return it + 1, dist, mask, e_hi, e_lo, rounds + r
 
@@ -322,10 +322,11 @@ def _delta_fixed_point(gl, gh, aux, dist, mask, delta, *, kernel: str,
 
 
 @partial(jax.jit, static_argnames=("heavy", "max_iterations", "op",
-                                   "backend"))
+                                   "backend", "sched"))
 def _delta_batch_fixed_point(gl, gh, dist_b, mask_b, delta, *, heavy: bool,
                              max_iterations: int, op: EdgeOp,
-                             backend: str = "xla"):
+                             backend: str = "xla",
+                             sched: Schedule = DEFAULT_SCHEDULE):
     """K delta-stepping traversals in one dispatch (WD phases, vmapped).
 
     Each row runs its own bucket sequence — rows settle *different*
@@ -343,7 +344,7 @@ def _delta_batch_fixed_point(gl, gh, dist_b, mask_b, delta, *, heavy: bool,
             it, dist, mask, e_hi, e_lo, rounds = c
             dist, mask, _b, r, eh, el = _epoch(
                 gl, gh, aux, dist, mask, delta, kernel="WD", heavy=heavy,
-                op=op, backend=backend)
+                op=op, backend=backend, sched=sched)
             e_hi, e_lo = _limb_add(e_hi + eh, e_lo, el)
             return it + 1, dist, mask, e_hi, e_lo, rounds + r
 
@@ -413,7 +414,8 @@ def run_batch_fixed_point(plan: DeltaPlan, dist_b, mask_b, *,
     dist_b, its, e_hi, e_lo, rounds = _delta_batch_fixed_point(
         plan.light, gh, dist_b, mask_b, jnp.int32(plan.delta),
         heavy=plan.heavy, max_iterations=max_iterations, op=op,
-        backend=backend)
+        backend=backend,
+        sched=plan.static.get("sched", DEFAULT_SCHEDULE))
     jax.block_until_ready(dist_b)
     edges = sum(int(h) * _LIMB + int(l)
                 for h, l in zip(np.asarray(e_hi), np.asarray(e_lo)))

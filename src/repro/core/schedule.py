@@ -1,0 +1,223 @@
+"""Schedules as first-class objects (arXiv:2301.04792, arXiv:2212.08964).
+
+A *schedule* answers "who relaxes which edges, in what shaped blocks":
+chunk streaming, merge-path tile shapes, HP's MDT sub-iteration tiling,
+the worklist capacity floor, delta-stepping's bucket width, and the
+Pallas kernel block/lane shapes.  Before this module those knobs were
+constants and keyword arguments smeared across ``strategies.py``,
+``fused.py``, ``priority.py`` and ``kernels/relax.py`` — adding a
+schedule meant a six-file edit.  Now they are one declarative,
+immutable, hashable description that every lowering consumes:
+
+* **stepped drivers** (``strategies.Strategy.iterate``) read the
+  worklist floor and the AD/HP heuristic thresholds;
+* **fused kernels** (``fused._fixed_point`` and the delta-stepping
+  epochs in ``priority``) take the whole ``Schedule`` as ONE static jit
+  argument — it is frozen and hashable, so jit caching works and equal
+  schedules never recompile;
+* **Pallas lowerings** (``repro.kernels.relax``) read the
+  ``tile_r``/``tile_c``/``chunk`` block shapes instead of their old
+  private module constants.
+
+The bit-parity contract survives the refactor *by construction*: the
+default :class:`Schedule` carries exactly the pre-extraction constants,
+and the built-in monoids fold associatively/commutatively, so any
+feasible tile shape produces identical ``dist``/iterations/edge totals
+(tests/test_schedule.py pins the pre-refactor goldens).
+
+Two different things are both called "schedule" in this engine — keep
+them apart (docs/schedules.md):
+
+* the **work ordering** — ``engine.run(..., schedule="bsp" | "delta")``,
+  a string: relax the whole frontier per iteration, or settle distance
+  buckets in priority order;
+* the **work assignment** — this module's :class:`Schedule` object: how
+  one iteration's relax work is shaped into lanes/tiles/chunks.
+
+Strategies carry a ``Schedule``; the string kwarg keeps its historical
+name and meaning.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import numpy as np
+
+#: pre-extraction defaults, frozen here so the golden-parity tests can
+#: say "the default Schedule IS the old constants" in one place
+_DEFAULTS = dict(min_bucket=256, tile_r=8, tile_c=128, chunk=128)
+
+#: TPU VPU lane width every last-dimension block size must divide into
+#: (mirrors repro.analysis.vmem.LANE without importing it)
+LANE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Declarative work-assignment description for one traversal.
+
+    Frozen + hashable on purpose: a ``Schedule`` is passed whole as a
+    single static argument to the fused/priority/sharded jits, so equal
+    schedules share one compiled executable and a changed field is a
+    deliberate recompile.  All fields are plain Python scalars — never
+    put arrays here.
+
+    Worklist / driver fields
+      ``min_bucket``        power-of-two floor of the capacity buckets
+                            (``worklist.bucket(n, minimum=...)``)
+    NS / HP MDT policy
+      ``mdt``               maximum degree threshold; ``None`` = derive
+                            from the degree histogram at ``setup``
+                            (``node_split.find_mdt``)
+      ``histogram_bins``    bins of that derivation
+      ``switch_threshold``  HP's hybrid fallback: frontiers at or below
+                            it take the straight-WD path
+    AD decision thresholds (the fixed arXiv:1911.09135 tree; ignored
+    when a measured :mod:`repro.core.costmodel` drives the choice)
+      ``small_frontier``, ``imbalance_threshold``, ``hp_edges_threshold``
+    Priority (delta-stepping) policy
+      ``delta``             bucket width; ``None`` = auto
+                            (``delta_multiplier × mean weight``, ≥ 1)
+      ``delta_multiplier``  the auto rule's multiplier
+    Pallas block/lane shapes (``repro.kernels.relax``)
+      ``tile_r`` × ``tile_c``  work items per grid step (the VPU vector
+                            registers); ``tile_c`` must be a multiple
+                            of the 128 lane width
+      ``chunk``             table chunk streamed per broadcast-compare
+                            pass; multiple of 128
+    """
+
+    # worklist / stepped drivers
+    min_bucket: int = _DEFAULTS["min_bucket"]
+    # NS / HP MDT policy
+    mdt: Optional[int] = None
+    histogram_bins: int = 10
+    switch_threshold: int = 1024
+    # AD fixed decision tree thresholds
+    small_frontier: int = 512
+    imbalance_threshold: float = 4.0
+    hp_edges_threshold: int = 1 << 15
+    # priority (delta-stepping) policy
+    delta: Optional[int] = None
+    delta_multiplier: int = 4
+    # Pallas block/lane shapes
+    tile_r: int = _DEFAULTS["tile_r"]
+    tile_c: int = _DEFAULTS["tile_c"]
+    chunk: int = _DEFAULTS["chunk"]
+
+    def __post_init__(self):
+        for name in ("min_bucket", "histogram_bins", "switch_threshold",
+                     "small_frontier", "hp_edges_threshold",
+                     "delta_multiplier", "tile_r", "tile_c", "chunk"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                raise ValueError(
+                    f"Schedule.{name} must be a positive int, got {v!r}")
+        for name in ("mdt", "delta"):
+            v = getattr(self, name)
+            if v is not None and (not isinstance(v, int)
+                                  or isinstance(v, bool) or v < 1):
+                raise ValueError(
+                    f"Schedule.{name} must be None or a positive int, "
+                    f"got {v!r}")
+        if self.min_bucket & (self.min_bucket - 1):
+            raise ValueError(
+                f"Schedule.min_bucket must be a power of two, got "
+                f"{self.min_bucket}")
+        for name in ("tile_c", "chunk"):
+            v = getattr(self, name)
+            if v % LANE:
+                raise ValueError(
+                    f"Schedule.{name} must be a multiple of the {LANE} "
+                    f"lane width, got {v}")
+        # the fused AD selector compares imbalance in float32 on device;
+        # canonicalize so host and device hold the same representable
+        # value and can never disagree within one rounding step
+        object.__setattr__(self, "imbalance_threshold",
+                           float(np.float32(self.imbalance_threshold)))
+
+    # -- derived -----------------------------------------------------------
+
+    @property
+    def tile(self) -> int:
+        """Work items per Pallas grid step (``tile_r × tile_c``)."""
+        return self.tile_r * self.tile_c
+
+    def resolve_mdt(self, degrees) -> int:
+        """The concrete MDT for a degree array: the declared ``mdt`` or
+        the histogram derivation (``node_split.find_mdt``)."""
+        if self.mdt is not None:
+            return int(self.mdt)
+        from repro.core import node_split
+        return int(node_split.find_mdt(np.asarray(degrees),
+                                       self.histogram_bins))
+
+    def resolved(self, degrees) -> "Schedule":
+        """A copy with ``mdt`` made concrete for ``degrees`` — what the
+        fused/priority/sharded lowerings receive as their static."""
+        return dataclasses.replace(self, mdt=self.resolve_mdt(degrees))
+
+    def replace(self, **overrides) -> "Schedule":
+        """``dataclasses.replace`` convenience (re-validates)."""
+        return dataclasses.replace(self, **overrides)
+
+    # -- lossless serialization -------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Schedule":
+        known = {f.name for f in dataclasses.fields(cls)}
+        bad = set(d) - known
+        if bad:
+            raise ValueError(
+                f"unknown Schedule fields {sorted(bad)}; known: "
+                f"{sorted(known)}")
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Schedule":
+        return cls.from_dict(json.loads(s))
+
+
+#: the pre-extraction constants as one immutable value; lowerings use it
+#: as the default so zero-config callers get bit-identical behaviour
+DEFAULT_SCHEDULE = Schedule()
+
+#: every field name, in declaration order — the schedule-consistency
+#: analysis pass (repro.analysis.schedules) checks each is actually read
+#: by some lowering
+SCHEDULE_FIELDS = tuple(f.name for f in dataclasses.fields(Schedule))
+
+
+def default_schedule(strategy_name: str) -> Schedule:
+    """The default :class:`Schedule` of a registered strategy.
+
+    All built-ins currently share :data:`DEFAULT_SCHEDULE` (the
+    pre-extraction constants); the hook exists so a strategy — or an
+    autotuner (:mod:`repro.core.costmodel`) — can register a tuned
+    default without touching driver code."""
+    return SCHEDULE_DEFAULTS.get(strategy_name, DEFAULT_SCHEDULE)
+
+
+#: per-strategy default overrides; see :func:`default_schedule`
+SCHEDULE_DEFAULTS: dict[str, Schedule] = {}
+
+
+def resolve_overrides(name: str, schedule: Optional[Schedule],
+                      **overrides) -> Schedule:
+    """Constructor-kwarg precedence shared by every strategy:
+    explicit non-``None`` kwarg > supplied ``schedule`` > the strategy's
+    default.  Keeps historical call sites
+    (``make_strategy("HP", switch_threshold=4, mdt=3)``) working
+    unchanged alongside ``make_strategy("HP", schedule=...)``."""
+    base = schedule if schedule is not None else default_schedule(name)
+    explicit = {k: v for k, v in overrides.items() if v is not None}
+    return dataclasses.replace(base, **explicit) if explicit else base

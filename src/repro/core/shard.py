@@ -77,6 +77,7 @@ from repro.core.fused import (DISPATCH_COUNTS, TRACE_COUNTS, _limb_add,
                               _LIMB, _plan)
 from repro.core.graph import CSRGraph
 from repro.core.operators import EdgeOp
+from repro.core.schedule import DEFAULT_SCHEDULE, Schedule
 from repro.core.strategies import _apply_relax
 
 #: mesh axis name of the 1-D shard partition
@@ -414,8 +415,9 @@ def _wd_step(sq: ShardedCSRGraph, dist, mask, *, op: EdgeOp,
     return dist, updated, jnp.sum(deg)
 
 
-def _hp_step(sq: ShardedCSRGraph, dist, mask, *, mdt: int,
-             switch_threshold: int, op: EdgeOp, sync: bool = True):
+def _hp_step(sq: ShardedCSRGraph, dist, mask, *,
+             sched: Schedule = DEFAULT_SCHEDULE, op: EdgeOp,
+             sync: bool = True):
     """Sharded dense HP: the hybrid's branch predicate and the inner
     tile loop's trip count are computed from ``psum``-global counts so
     all shards stay in lockstep; the combine runs per MDT tile (HP's
@@ -423,6 +425,8 @@ def _hp_step(sq: ShardedCSRGraph, dist, mask, *, mdt: int,
     ``sync=False`` decides the branch and tile trip count from *local*
     counts (async shards make local scheduling decisions) and never
     combines."""
+    mdt = sched.mdt or 1
+    switch_threshold = sched.switch_threshold
     gids, deg, member = _local_frontier(sq, mask)
     local_count = jnp.sum(member.astype(jnp.int32))
     count = lax.psum(local_count, AXIS) if sync else local_count
@@ -491,10 +495,10 @@ def _ns_step(sq: ShardedCSRGraph, child_parent, dist, mask, *, op: EdgeOp,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=(
-    "kernel", "max_iterations", "mdt", "switch_threshold", "op", "mesh"))
+    "kernel", "max_iterations", "sched", "op", "mesh"))
 def _sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
-                         kernel: str, max_iterations: int, mdt: int = 1,
-                         switch_threshold: int = 1024,
+                         kernel: str, max_iterations: int,
+                         sched: Schedule = DEFAULT_SCHEDULE,
                          op: EdgeOp = operators.shortest_path, mesh=None):
     """Whole sharded traversal: one dispatch, S devices.
 
@@ -518,9 +522,7 @@ def _sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
             elif kernel == "WD":
                 dist, upd, e = _wd_step(sq, dist, mask, op=op)
             elif kernel == "HP":
-                dist, upd, e = _hp_step(sq, dist, mask, mdt=mdt,
-                                        switch_threshold=switch_threshold,
-                                        op=op)
+                dist, upd, e = _hp_step(sq, dist, mask, sched=sched, op=op)
             elif kernel == "NS":
                 dist, upd, e = _ns_step(sq, aux, dist, mask, op=op)
             else:  # pragma: no cover - guarded by plan_shards
@@ -540,10 +542,10 @@ def _sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
 
 
 @partial(jax.jit, static_argnames=(
-    "kernel", "max_iterations", "mdt", "switch_threshold", "op", "mesh"))
+    "kernel", "max_iterations", "sched", "op", "mesh"))
 def _async_sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
                                kernel: str, max_iterations: int,
-                               mdt: int = 1, switch_threshold: int = 1024,
+                               sched: Schedule = DEFAULT_SCHEDULE,
                                op: EdgeOp = operators.shortest_path,
                                mesh=None):
     """Asynchronous sharded traversal: shards run ahead between combines.
@@ -584,8 +586,7 @@ def _async_sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
             if kernel == "WD":
                 return _wd_step(sq, dist, mask, op=op, sync=False)
             if kernel == "HP":
-                return _hp_step(sq, dist, mask, mdt=mdt,
-                                switch_threshold=switch_threshold, op=op,
+                return _hp_step(sq, dist, mask, sched=sched, op=op,
                                 sync=False)
             if kernel == "NS":
                 return _ns_step(sq, aux, dist, mask, op=op, sync=False)
@@ -641,7 +642,8 @@ class ShardedPlan:
     sharded: ShardedCSRGraph
     info: ShardInfo
     aux: Optional[jax.Array]     # NS child→parent map
-    static: dict                 # threshold kwargs for _sharded_fixed_point
+    static: dict                 # static kwargs (the resolved Schedule)
+    #                              for _sharded_fixed_point
     mesh: Any
 
 

@@ -61,6 +61,8 @@ docs/backends.md.  Strategies advertise support via the
 from __future__ import annotations
 
 import dataclasses
+import math
+import time
 from functools import partial
 from typing import Any, Optional
 
@@ -71,6 +73,8 @@ import numpy as np
 from repro.core import node_split, operators
 from repro.core.graph import CSRGraph, COOGraph
 from repro.core.operators import EdgeOp
+from repro.core.schedule import (
+    DEFAULT_SCHEDULE, Schedule, default_schedule, resolve_overrides)
 from repro.core.worklist import bucket, compact_mask, run_fill
 
 try:  # optional Pallas relax backend (backend="pallas", docs/backends.md)
@@ -126,17 +130,20 @@ def pallas_relax_module():
     return _pallas_relax
 
 
-def relax_fn(backend: str):
+def relax_fn(backend: str, sched: Schedule = DEFAULT_SCHEDULE):
     """The relax primitive for a backend: :func:`_apply_relax` (XLA
     gather/scatter) or the signature-compatible Pallas drop-in
     (``repro.kernels.relax.apply_relax`` — fused scatter-combine in
     VMEM).  Every kernel below dispatches through this, so the chunk
     schedule — and therefore the bit-exact results — never depends on
-    the backend."""
+    the backend.  ``sched`` supplies the Pallas block/lane shapes
+    (``tile_r``/``tile_c``/``chunk``); the XLA lowering has no block
+    shapes to read."""
     if backend == "xla":
         return _apply_relax
     if backend == "pallas":
-        return pallas_relax_module().apply_relax
+        mod = pallas_relax_module()
+        return partial(mod.apply_relax, **mod.tile_kwargs(sched))
     raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
 
 
@@ -144,16 +151,17 @@ def relax_fn(backend: str):
 # BS — node-based baseline (LonestarGPU-style)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap", "op", "backend"))
+@partial(jax.jit, static_argnames=("cap", "op", "backend", "sched"))
 def bs_relax(g: CSRGraph, dist, frontier, *, cap: int,
-             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla",
+             sched: Schedule = DEFAULT_SCHEDULE):
     """Each frontier slot ("thread") walks its own adjacency list.
 
     The walk runs for max-degree-in-frontier steps with lanes masked once
     their node is exhausted — the TPU manifestation of the paper's
     node-based imbalance (idle lanes ∝ degree variance)."""
     del cap  # shapes already carry it; kept for bucketed specialization
-    relax = relax_fn(backend)
+    relax = relax_fn(backend, sched)
     mask = frontier >= 0
     f = jnp.where(mask, frontier, 0)
     deg = jnp.where(mask, g.row_ptr[f + 1] - g.row_ptr[f], 0)
@@ -182,9 +190,10 @@ def bs_relax(g: CSRGraph, dist, frontier, *, cap: int,
 # EP — edge-based parallelism over a COO edge worklist
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap", "op", "backend"))
+@partial(jax.jit, static_argnames=("cap", "op", "backend", "sched"))
 def ep_relax(coo: COOGraph, dist, edge_wl, *, cap: int,
-             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla",
+             sched: Schedule = DEFAULT_SCHEDULE):
     """One lane per worklist edge — near-perfect balance (paper §II-B)."""
     del cap
     mask = edge_wl >= 0
@@ -192,8 +201,8 @@ def ep_relax(coo: COOGraph, dist, edge_wl, *, cap: int,
     src, dst = coo.src[e], coo.dst[e]
     w = _edge_weight(coo, e)
     updated = jnp.zeros((dist.shape[0],), jnp.bool_)
-    dist, updated, improve = relax_fn(backend)(dist, updated, src, dst, w,
-                                               mask, op=op)
+    dist, updated, improve = relax_fn(backend, sched)(dist, updated, src,
+                                                      dst, w, mask, op=op)
     return dist, updated, improve, dst
 
 
@@ -225,9 +234,10 @@ def ep_push_unchunked(row_ptr, improve, dst, total, *, cap_out: int):
 # WD — workload decomposition (merge-path over the frontier's edges)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap_work", "op", "backend"))
+@partial(jax.jit, static_argnames=("cap_work", "op", "backend", "sched"))
 def wd_relax(g: CSRGraph, dist, frontier, cursor, *, cap_work: int,
-             op: EdgeOp = operators.shortest_path, backend: str = "xla"):
+             op: EdgeOp = operators.shortest_path, backend: str = "xla",
+             sched: Schedule = DEFAULT_SCHEDULE):
     """Block-distribute the frontier's edges across ``cap_work`` lanes.
 
     prefix-sum over (remaining) frontier degrees, then every work item k
@@ -253,7 +263,7 @@ def wd_relax(g: CSRGraph, dist, frontier, cursor, *, cap_work: int,
         start = g.row_ptr[f] + cursor
         prop, upd, _ = relax.wd_relax_lanes(
             dist, prefix, exclusive, start, f, g.col, g.wt,
-            cap_work=cap_work, op=op)
+            cap_work=cap_work, op=op, **relax.tile_kwargs(sched))
         return relax.apply_proposal(dist, prop, op), updated | upd
     k = jnp.arange(cap_work, dtype=jnp.int32)
     node_idx = jnp.searchsorted(prefix, k, side="right").astype(jnp.int32)
@@ -295,10 +305,11 @@ def ns_activate(dist2, mask2, child_parent):
 # HP — hierarchical processing (≤ MDT edges per node per sub-iteration)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cap", "mdt", "op", "backend"))
+@partial(jax.jit, static_argnames=("cap", "mdt", "op", "backend", "sched"))
 def hp_sub_relax(g: CSRGraph, dist, sub, cursor, *, cap: int, mdt: int,
                  op: EdgeOp = operators.shortest_path,
-                 backend: str = "xla"):
+                 backend: str = "xla",
+                 sched: Schedule = DEFAULT_SCHEDULE):
     """One sub-iteration: every sublist node processes its next ≤MDT edges
     (a dense [cap, MDT] tile — all lanes bounded by MDT, i.e. balanced
     within the threshold, §III-C).  Returns the surviving sublist mask."""
@@ -312,7 +323,7 @@ def hp_sub_relax(g: CSRGraph, dist, sub, cursor, *, cap: int, mdt: int,
     eidx = jnp.clip(g.row_ptr[n][:, None] + pos, 0, g.num_edges - 1)
     src = jnp.broadcast_to(n[:, None], eidx.shape).reshape(-1)
     updated = jnp.zeros((dist.shape[0],), jnp.bool_)
-    dist, updated, _ = relax_fn(backend)(
+    dist, updated, _ = relax_fn(backend, sched)(
         dist, updated, src, g.col[eidx.reshape(-1)],
         _edge_weight(g, eidx.reshape(-1)), valid.reshape(-1), op=op)
     new_cursor = cursor + mdt
@@ -399,12 +410,28 @@ class StrategyBase:
     by having a dense-mask lowering mapped in ``repro.core.fused._plan``,
     and declares what callers may assume about it through its
     ``capabilities`` set (see :data:`FRONTIER_INIT` and
-    :func:`register`)."""
+    :func:`register`).
+
+    Every strategy carries a work-assignment :class:`Schedule`
+    (docs/schedules.md): pass ``schedule=`` to declare one, or rely on
+    the strategy's registered default.  Constructor threshold kwargs
+    (``mdt=``, ``switch_threshold=``, ...) remain as per-field overrides
+    of that schedule.  ``setup`` resolves auto fields (MDT from the
+    degree histogram) into ``resolved_schedule`` — the concrete value
+    the fused/priority/sharded lowerings take as their one static
+    argument."""
 
     name = "base"
     #: declared capability flags; third-party strategies override this in
     #: the class body or via ``register(capabilities=...)``
     capabilities: frozenset = DEFAULT_CAPABILITIES
+
+    def __init__(self, schedule: Optional[Schedule] = None):
+        self.schedule = (schedule if schedule is not None
+                         else default_schedule(self.name))
+        #: concrete schedule after ``setup`` (auto fields resolved);
+        #: strategies with auto fields overwrite this there
+        self.resolved_schedule = self.schedule
 
     #: peak auxiliary device bytes (graph copies etc.) — feeds the paper's
     #: memory-requirement axis (Fig. 9)
@@ -482,11 +509,12 @@ class NodeBased(StrategyBase):
     def iterate(self, g, dist, updated_mask, count, *,
                 op: EdgeOp = operators.shortest_path, record_degrees=False,
                 backend: str = "xla"):
-        cap = bucket(count)
+        sched = self.schedule
+        cap = bucket(count, sched.min_bucket)
         frontier = compact_mask(updated_mask, cap)
         stats = _frontier_stats(g, frontier, count, record_degrees)
         dist, new_mask = bs_relax(g, dist, frontier, cap=cap, op=op,
-                                  backend=backend)
+                                  backend=backend, sched=sched)
         return dist, new_mask, stats
 
 
@@ -501,7 +529,9 @@ class EdgeBased(StrategyBase):
     capabilities = frozenset({PALLAS_BACKEND})
 
     def __init__(self, chunked: bool = True, wl_capacity_factor: float = 4.0,
-                 memory_budget_bytes: Optional[int] = None):
+                 memory_budget_bytes: Optional[int] = None,
+                 schedule: Optional[Schedule] = None):
+        super().__init__(schedule=resolve_overrides(self.name, schedule))
         self.chunked = chunked
         self.wl_capacity_factor = wl_capacity_factor
         self.memory_budget_bytes = memory_budget_bytes
@@ -520,7 +550,7 @@ class EdgeBased(StrategyBase):
 
     def initial_worklist(self, coo: COOGraph, source: int):
         deg = int(self._degrees[source])
-        cap = bucket(deg)
+        cap = bucket(deg, self.schedule.min_bucket)
         start = int(np.asarray(coo.row_ptr)[source])
         wl = np.full(cap, -1, np.int32)
         wl[:deg] = np.arange(start, start + deg, dtype=np.int32)
@@ -530,13 +560,15 @@ class EdgeBased(StrategyBase):
                        op: EdgeOp = operators.shortest_path,
                        backend: str = "xla"):
         cap = edge_wl.shape[0]
+        min_bucket = self.schedule.min_bucket
         dist, new_mask, improve, dst = ep_relax(coo, dist, edge_wl, cap=cap,
-                                                op=op, backend=backend)
+                                                op=op, backend=backend,
+                                                sched=self.schedule)
         if self.chunked:
             nodes_np = np.asarray(new_mask)
             total = int(self._degrees[nodes_np].sum())
             wl = ep_push_chunked(coo.row_ptr, new_mask, total,
-                                 cap_out=bucket(total))
+                                 cap_out=bucket(total, min_bucket))
         else:
             improve_np, dst_np = np.asarray(improve), np.asarray(dst)
             total = int(self._degrees[dst_np[improve_np]].sum())
@@ -548,14 +580,14 @@ class EdgeBased(StrategyBase):
                 total = int(self._degrees[uniq].sum())
                 starts = np.asarray(coo.row_ptr)[uniq]
                 lens = self._degrees[uniq]
-                wl_np = np.full(bucket(total), -1, np.int32)
+                wl_np = np.full(bucket(total, min_bucket), -1, np.int32)
                 out = np.concatenate([np.arange(s, s + l) for s, l in
                                       zip(starts, lens)]) if total else []
                 wl_np[: total] = out
                 wl = jnp.asarray(wl_np)
             else:
                 wl = ep_push_unchunked(coo.row_ptr, improve, dst, total,
-                                       cap_out=bucket(total))
+                                       cap_out=bucket(total, min_bucket))
         return dist, new_mask, wl, total
 
 
@@ -571,7 +603,8 @@ class WorkloadDecomposition(StrategyBase):
     def iterate(self, g, dist, updated_mask, count, *,
                 op: EdgeOp = operators.shortest_path, record_degrees=False,
                 edge_total=None, backend: str = "xla"):
-        cap = bucket(count)
+        sched = self.schedule
+        cap = bucket(count, sched.min_bucket)
         frontier = compact_mask(updated_mask, cap)
         stats = _frontier_stats(g, frontier, count, record_degrees)
         # edge_total lets callers that already synced the mask (AD) pass
@@ -581,8 +614,8 @@ class WorkloadDecomposition(StrategyBase):
                  if edge_total is None else int(edge_total))
         cursor = jnp.zeros((cap,), jnp.int32)
         dist, new_mask = wd_relax(g, dist, frontier, cursor,
-                                  cap_work=bucket(total), op=op,
-                                  backend=backend)
+                                  cap_work=bucket(total, sched.min_bucket),
+                                  op=op, backend=backend, sched=sched)
         stats.edges_processed = total
         return dist, new_mask, stats
 
@@ -592,29 +625,35 @@ class NodeSplitting(StrategyBase):
     name = "NS"
     capabilities = SHARDED_CAPABILITIES
 
-    def __init__(self, histogram_bins: int = 10, mdt: Optional[int] = None):
-        self.histogram_bins = histogram_bins
-        self.mdt = mdt
+    def __init__(self, histogram_bins: Optional[int] = None,
+                 mdt: Optional[int] = None,
+                 schedule: Optional[Schedule] = None):
+        super().__init__(schedule=resolve_overrides(
+            self.name, schedule, histogram_bins=histogram_bins, mdt=mdt))
+        self.histogram_bins = self.schedule.histogram_bins
+        self.mdt = self.schedule.mdt
         self.split_info: Optional[node_split.SplitGraph] = None
 
     def setup(self, graph: CSRGraph):
         degrees = np.asarray(graph.degrees)
-        mdt = self.mdt or node_split.find_mdt(degrees, self.histogram_bins)
-        self.split_info = node_split.split_graph(graph, mdt)
+        self.resolved_schedule = self.schedule.resolved(degrees)
+        self.split_info = node_split.split_graph(
+            graph, self.resolved_schedule.mdt)
         return self.split_info
 
     def iterate(self, sg, dist, updated_mask, count, *,
                 op: EdgeOp = operators.shortest_path, record_degrees=False,
                 backend: str = "xla"):
+        sched = self.schedule
         g2 = sg.graph
         # mirror parent dist onto children + co-activate children
         dist, mask2 = ns_activate(dist, updated_mask, sg.child_parent)
         count2 = int(jnp.sum(mask2))
-        cap = bucket(count2)
+        cap = bucket(count2, sched.min_bucket)
         frontier = compact_mask(mask2, cap)
         stats = _frontier_stats(g2, frontier, count2, record_degrees)
         dist, new_mask = bs_relax(g2, dist, frontier, cap=cap, op=op,
-                                  backend=backend)
+                                  backend=backend, sched=sched)
         return dist, new_mask, stats
 
     def state_bytes(self, sg):
@@ -626,32 +665,38 @@ class HierarchicalProcessing(StrategyBase):
     name = "HP"
     capabilities = SHARDED_CAPABILITIES
 
-    def __init__(self, histogram_bins: int = 10, mdt: Optional[int] = None,
-                 switch_threshold: int = 1024):
-        self.histogram_bins = histogram_bins
-        self.mdt = mdt
-        self.switch_threshold = switch_threshold
+    def __init__(self, histogram_bins: Optional[int] = None,
+                 mdt: Optional[int] = None,
+                 switch_threshold: Optional[int] = None,
+                 schedule: Optional[Schedule] = None):
+        super().__init__(schedule=resolve_overrides(
+            self.name, schedule, histogram_bins=histogram_bins, mdt=mdt,
+            switch_threshold=switch_threshold))
+        self.histogram_bins = self.schedule.histogram_bins
+        self.mdt = self.schedule.mdt
+        self.switch_threshold = self.schedule.switch_threshold
 
     def setup(self, graph: CSRGraph):
         degrees = np.asarray(graph.degrees)
         self._degrees = degrees
-        self.mdt_value = self.mdt or node_split.find_mdt(
-            degrees, self.histogram_bins)
-        self._wd = WorkloadDecomposition()
+        self.resolved_schedule = self.schedule.resolved(degrees)
+        self.mdt_value = self.resolved_schedule.mdt
+        self._wd = WorkloadDecomposition(schedule=self.schedule)
         self._wd.setup(graph)
         return graph
 
     def iterate(self, g, dist, updated_mask, count, *,
                 op: EdgeOp = operators.shortest_path, record_degrees=False,
                 backend: str = "xla"):
-        cap = bucket(count)
+        sched = self.schedule
+        cap = bucket(count, sched.min_bucket)
         frontier = compact_mask(updated_mask, cap)
         stats = _frontier_stats(g, frontier, count, record_degrees)
         acc_mask = jnp.zeros((dist.shape[0],), jnp.bool_)
         mdt = self.mdt_value
 
         # Hybrid: small super list -> straight WD (paper §III-C)
-        if count <= self.switch_threshold:
+        if count <= sched.switch_threshold:
             dist, new_mask, sub_stats = self._wd.iterate(
                 g, dist, updated_mask, count, op=op, backend=backend)
             stats.edges_processed = sub_stats.edges_processed
@@ -660,15 +705,15 @@ class HierarchicalProcessing(StrategyBase):
         sub, cursor = frontier, jnp.zeros((cap,), jnp.int32)
         live = count
         subiters = 0
-        while live > self.switch_threshold:
+        while live > sched.switch_threshold:
             dist, upd, cursor, alive = hp_sub_relax(
                 g, dist, sub, cursor, cap=sub.shape[0], mdt=mdt, op=op,
-                backend=backend)
+                backend=backend, sched=sched)
             acc_mask = acc_mask | upd
             live = int(jnp.sum(alive))
             subiters += 1
             if live:
-                cap2 = bucket(live)
+                cap2 = bucket(live, sched.min_bucket)
                 sub, cursor = compact_pair(sub, cursor, alive, cap_out=cap2)
         if live > 0:
             # finish the small sublist with cursor-aware WD
@@ -679,8 +724,8 @@ class HierarchicalProcessing(StrategyBase):
             total = int(np.maximum(rem, 0).sum())
             if total > 0:
                 dist, upd = wd_relax(g, dist, sub, cursor,
-                                     cap_work=bucket(total), op=op,
-                                     backend=backend)
+                                     cap_work=bucket(total, sched.min_bucket),
+                                     op=op, backend=backend, sched=sched)
                 acc_mask = acc_mask | upd
             subiters += 1
         stats.sub_iterations = subiters
@@ -734,7 +779,15 @@ def choose_kernel(count: int, degree_sum: int, max_degree: int,
       balanced at the cost of a prefix-sum + binary search per iteration.
     """
     if degree_sum == 0 or count == 0:
+        # degenerate frontier: a seeded run whose source is isolated (or
+        # an empty mask) has no edges to balance, and the imbalance
+        # ratio is 0/0 — BS's per-node loop is the cheapest no-op
         return "BS"
+    if not math.isfinite(imbalance):
+        # a caller-computed ratio can still arrive inf/NaN
+        # (max_degree / 0-mean); comparing NaN would silently fail every
+        # branch, so pin it to "maximally skewed" explicitly
+        imbalance = math.inf
     if count <= small_frontier and imbalance <= imbalance_threshold:
         return "BS"
     if max_degree > mdt and degree_sum >= hp_edges_threshold:
@@ -762,28 +815,46 @@ class AdaptiveStrategy(StrategyBase):
     capabilities = frozenset({FRONTIER_INIT, PALLAS_BACKEND,
                               PRIORITY_SCHEDULE})
 
-    def __init__(self, small_frontier: int = 512,
-                 imbalance_threshold: float = 4.0,
-                 hp_edges_threshold: int = 1 << 15,
-                 histogram_bins: int = 10, mdt: Optional[int] = None):
-        self.small_frontier = small_frontier
-        # canonicalized to float32: the fused selector compares in f32 on
-        # device, so the host side must hold the same representable value
-        # or the two could disagree within one rounding step
-        self.imbalance_threshold = float(np.float32(imbalance_threshold))
-        self.hp_edges_threshold = hp_edges_threshold
-        self.histogram_bins = histogram_bins
-        self.mdt = mdt
+    def __init__(self, small_frontier: Optional[int] = None,
+                 imbalance_threshold: Optional[float] = None,
+                 hp_edges_threshold: Optional[int] = None,
+                 histogram_bins: Optional[int] = None,
+                 mdt: Optional[int] = None,
+                 schedule: Optional[Schedule] = None,
+                 cost_model=None, online: bool = False):
+        super().__init__(schedule=resolve_overrides(
+            self.name, schedule, small_frontier=small_frontier,
+            imbalance_threshold=imbalance_threshold,
+            hp_edges_threshold=hp_edges_threshold,
+            histogram_bins=histogram_bins, mdt=mdt))
+        sched = self.schedule
+        self.small_frontier = sched.small_frontier
+        # Schedule.__post_init__ canonicalized this to float32: the fused
+        # selector compares in f32 on device, so the host side must hold
+        # the same representable value or the two could disagree within
+        # one rounding step
+        self.imbalance_threshold = sched.imbalance_threshold
+        self.hp_edges_threshold = sched.hp_edges_threshold
+        self.histogram_bins = sched.histogram_bins
+        self.mdt = sched.mdt
+        #: measured cost model (repro.core.costmodel.CostModel) — when
+        #: set, per-iteration choice comes from its fitted per-kernel
+        #: linear model instead of the fixed arXiv:1911.09135 tree
+        self.cost_model = cost_model
+        #: refine the cost model online from per-iteration wall times
+        #: (host-stepped mode only; implies a block_until_ready per step)
+        self.online = bool(online)
         self.kernel_counts: dict[str, int] = {}
 
     def setup(self, graph: CSRGraph):
         self._degrees = np.asarray(graph.degrees)
-        self.mdt_value = self.mdt or node_split.find_mdt(
-            self._degrees, self.histogram_bins)
+        self.resolved_schedule = self.schedule.resolved(self._degrees)
+        self.mdt_value = self.resolved_schedule.mdt
         self._kernels = {
-            "BS": NodeBased(),
-            "WD": WorkloadDecomposition(),
-            "HP": HierarchicalProcessing(mdt=self.mdt_value),
+            "BS": NodeBased(schedule=self.schedule),
+            "WD": WorkloadDecomposition(schedule=self.schedule),
+            "HP": HierarchicalProcessing(mdt=self.mdt_value,
+                                         schedule=self.schedule),
         }
         for k in self._kernels.values():
             k.setup(graph)
@@ -804,17 +875,26 @@ class AdaptiveStrategy(StrategyBase):
         mean = np.float32(degree_sum) / np.float32(max(int(count), 1))
         imbalance = (float(np.float32(max_degree) / mean)
                      if mean > 0 else 1.0)
-        choice = choose_kernel(
-            int(count), degree_sum, max_degree,
-            imbalance, mdt=self.mdt_value,
-            small_frontier=self.small_frontier,
-            imbalance_threshold=self.imbalance_threshold,
-            hp_edges_threshold=self.hp_edges_threshold)
+        if self.cost_model is not None:
+            choice = self.cost_model.choose(int(count), degree_sum)
+        else:
+            choice = choose_kernel(
+                int(count), degree_sum, max_degree,
+                imbalance, mdt=self.mdt_value,
+                small_frontier=self.small_frontier,
+                imbalance_threshold=self.imbalance_threshold,
+                hp_edges_threshold=self.hp_edges_threshold)
         self.kernel_counts[choice] = self.kernel_counts.get(choice, 0) + 1
         extra = {"edge_total": degree_sum} if choice == "WD" else {}
+        t0 = (time.perf_counter()
+              if (self.online and self.cost_model is not None) else None)
         dist, new_mask, stats = self._kernels[choice].iterate(
             g, dist, updated_mask, count, op=op,
             record_degrees=record_degrees, backend=backend, **extra)
+        if t0 is not None:
+            jax.block_until_ready(dist)
+            self.cost_model.observe(choice, degree_sum, int(count),
+                                    time.perf_counter() - t0)
         stats.kernel = choice
         if stats.edges_processed == 0:
             stats.edges_processed = degree_sum

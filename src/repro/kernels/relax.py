@@ -26,15 +26,26 @@ monoid (min/max/add):
 
 TPU mapping (see /opt notes + repro.kernels.find_offsets): dynamic
 per-lane gathers don't vectorize on the VPU, so every gather/scatter is
-a *broadcast compare* streamed over 128-wide chunks resident in VMEM:
+a *broadcast compare* streamed over ``chunk``-wide table chunks resident
+in VMEM:
 
 * gather   ``dist[src]``:  ``Σ_chunk Σ_n [src == n] · dist[n]``
   (exactly-one-hot sum — pure VPU compare/select/add);
-* scatter-combine into the proposal:  for each 128-node output chunk,
-  fold ``where(dst == n  ∧  improves, cand, identity)`` over the tile's
-  lanes with the monoid's reduction.  The fold happens entirely in the
-  VMEM-resident output block, which Pallas revisits across grid steps
-  (constant ``index_map``) — one accumulator, many lane tiles.
+* scatter-combine into the proposal:  for each ``chunk``-node output
+  chunk, fold ``where(dst == n  ∧  improves, cand, identity)`` over the
+  tile's lanes with the monoid's reduction.  The fold happens entirely
+  in the VMEM-resident output block, which Pallas revisits across grid
+  steps (constant ``index_map``) — one accumulator, many lane tiles.
+
+Block/lane shapes come from the :class:`repro.core.schedule.Schedule`
+fields ``tile_r``/``tile_c``/``chunk`` (static jit arguments here); the
+module constants :data:`TILE_R`/:data:`TILE_C`/:data:`CHUNK` are their
+defaults — the pre-extraction constants, kept so zero-config callers
+are bit-identical to the historical kernels.  Any feasible tile shape
+yields the same results: the built-in monoids are associative and
+commutative on int32, so regrouping the per-destination fold across
+tiles cannot change the outcome (tests/test_schedule.py exercises
+non-default shapes against the XLA path).
 
 The kernels return a dense **proposal** array (the monoid fold of every
 improving candidate per destination, identity elsewhere) instead of
@@ -62,26 +73,29 @@ from jax.experimental import pallas as pl
 from repro.core import operators
 from repro.core.operators import EdgeOp
 
-TILE_R, TILE_C = 8, 128          # VPU vector registers
+TILE_R, TILE_C = 8, 128          # VPU vector registers (schedule default)
 TILE = TILE_R * TILE_C           # work items per grid step
 CHUNK = 128                      # table chunk streamed per compare pass
 
 #: per-core VMEM capacity the block plans must fit in (TPU VMEM is
 #: ~16 MiB/core; see the Pallas guide).  The static feasibility oracle
 #: :mod:`repro.analysis.vmem` fails any kernel whose resident blocks
-#: exceed this, so block-size autotuning (ROADMAP) can reject a
-#: configuration before ever compiling it.
+#: exceed this, and the block-size candidate enumeration in
+#: :mod:`repro.core.costmodel` rejects a configuration before ever
+#: compiling it.
 VMEM_BUDGET_BYTES = 16 * 1024 * 1024
 
 #: compare/select temporaries concurrently live during a
 #: :func:`_combine_pass` / :func:`_onehot_gather` chunk step, each a
-#: ``[TILE_R, TILE_C, CHUNK]`` block (``hit``, ``ok``, ``vals`` + the
+#: ``[tile_r, tile_c, chunk]`` block (``hit``, ``ok``, ``vals`` + the
 #: gather's ``sel``) — the scratch term of the footprint model below.
 _SCRATCH_BLOCKS = 4
 
 
 def kernel_vmem_blocks(kernel: str, *, n: int, f: int | None = None,
-                       e: int | None = None, itemsize: int = 4) -> dict:
+                       e: int | None = None, itemsize: int = 4,
+                       tile_r: int = TILE_R, tile_c: int = TILE_C,
+                       chunk: int = CHUNK) -> dict:
     """Per-grid-step VMEM-resident blocks of one kernel, in bytes.
 
     The declarative footprint model backing the static budget check
@@ -93,26 +107,30 @@ def kernel_vmem_blocks(kernel: str, *, n: int, f: int | None = None,
     :func:`wd_relax_lanes` above.
 
     ``kernel`` is ``"lanes"`` or ``"wd"``; ``n``/``f``/``e`` are the
-    *unpadded* node / frontier-slot / edge counts (padding to CHUNK
+    *unpadded* node / frontier-slot / edge counts (padding to ``chunk``
     happens here, exactly as the entry points do); ``itemsize`` is the
-    operator dtype's width (int32 ⇒ 4).
+    operator dtype's width (int32 ⇒ 4).  ``tile_r``/``tile_c``/``chunk``
+    evaluate a candidate :class:`~repro.core.schedule.Schedule`'s block
+    shapes — the feasibility oracle the block-size autotuner filters
+    candidates through.
     """
-    n_pad = _round_up(n, CHUNK)
+    tile = tile_r * tile_c
+    n_pad = _round_up(n, chunk)
     blocks = {
         "dist": n_pad * itemsize,            # full input, revisited
         "proposal": n_pad * itemsize,        # full output accumulator
         "updated": n_pad * 4,                # full output accumulator
-        "improve_tile": TILE * 4,            # per-step lane output tile
-        "scratch": _SCRATCH_BLOCKS * TILE * CHUNK * itemsize,
+        "improve_tile": tile * 4,            # per-step lane output tile
+        "scratch": _SCRATCH_BLOCKS * tile * chunk * itemsize,
     }
     if kernel == "lanes":
         # src/dst/valid int32 lane tiles + the weight tile in op dtype
-        blocks["lane_tiles"] = TILE * (3 * 4 + itemsize)
+        blocks["lane_tiles"] = tile * (3 * 4 + itemsize)
     elif kernel == "wd":
         if f is None or e is None:
             raise ValueError("kernel 'wd' needs f= and e= shapes")
-        f_pad = _round_up(f, CHUNK)
-        e_pad = _round_up(e, CHUNK)
+        f_pad = _round_up(f, chunk)
+        e_pad = _round_up(e, chunk)
         # prefix/exclusive/start/src_ids slot tables, full inputs
         blocks["slot_tables"] = 4 * f_pad * 4
         # CSR col (int32) + wt (op dtype), full inputs
@@ -137,7 +155,7 @@ def _fold2(combine: str, a, b):
 
 
 def _reduce_tile(combine: str, vals):
-    """Fold a [TILE_R, TILE_C, CHUNK] candidate block over its lane axes."""
+    """Fold a [tile_r, tile_c, chunk] candidate block over its lane axes."""
     if combine == "min":
         return jnp.min(vals, axis=(0, 1))
     if combine == "max":
@@ -145,40 +163,44 @@ def _reduce_tile(combine: str, vals):
     return jnp.sum(vals, axis=(0, 1))
 
 
-def _ids3(base: int):
-    """[TILE_R, TILE_C, CHUNK] iota along the chunk axis, offset ``base``
+def _ids3(base: int, tile_r: int, tile_c: int, chunk: int):
+    """[tile_r, tile_c, chunk] iota along the chunk axis, offset ``base``
     (broadcasted_iota: TPU has no 1-D iota)."""
     return base + jax.lax.broadcasted_iota(
-        jnp.int32, (TILE_R, TILE_C, CHUNK), 2)
+        jnp.int32, (tile_r, tile_c, chunk), 2)
 
 
-def _onehot_gather(table_ref, idx, length: int, dtype):
-    """``table[idx]`` per lane via broadcast compare-and-sum over CHUNKs.
+def _onehot_gather(table_ref, idx, length: int, dtype, *, tile_r: int,
+                   tile_c: int, chunk: int):
+    """``table[idx]`` per lane via broadcast compare-and-sum over chunks.
 
     ``idx`` must be clipped into ``[0, real_length)`` by the caller so
     exactly one chunk entry matches per lane (padded tail entries have
     ids >= real length and can never match)."""
-    out = jnp.zeros((TILE_R, TILE_C), dtype)
-    for c in range(length // CHUNK):
-        chunk = table_ref[c * CHUNK:(c + 1) * CHUNK]
-        sel = idx[:, :, None] == _ids3(c * CHUNK)
+    out = jnp.zeros((tile_r, tile_c), dtype)
+    for c in range(length // chunk):
+        blk = table_ref[c * chunk:(c + 1) * chunk]
+        sel = idx[:, :, None] == _ids3(c * chunk, tile_r, tile_c, chunk)
         out = out + jnp.sum(
-            jnp.where(sel, chunk[None, None, :], jnp.zeros((), dtype)),
+            jnp.where(sel, blk[None, None, :], jnp.zeros((), dtype)),
             axis=-1)
     return out
 
 
 def _combine_pass(dist_ref, prop_ref, upd_ref, cand, dst, valid, *,
-                  op: EdgeOp, n_pad: int):
+                  op: EdgeOp, n_pad: int, tile_r: int, tile_c: int,
+                  chunk: int):
     """The fused scatter-combine: fold this tile's improving candidates
-    into the VMEM proposal/updated accumulators, one 128-node output
-    chunk at a time.  Returns the per-lane improve mask (int32 0/1)."""
+    into the VMEM proposal/updated accumulators, one ``chunk``-node
+    output chunk at a time.  Returns the per-lane improve mask (int32
+    0/1)."""
     ident = jnp.asarray(op.identity, op.dtype)
-    imp = jnp.zeros((TILE_R, TILE_C), jnp.int32)
-    for c in range(n_pad // CHUNK):
-        sl = slice(c * CHUNK, (c + 1) * CHUNK)
+    imp = jnp.zeros((tile_r, tile_c), jnp.int32)
+    for c in range(n_pad // chunk):
+        sl = slice(c * chunk, (c + 1) * chunk)
         cur = dist_ref[sl]
-        hit = (dst[:, :, None] == _ids3(c * CHUNK)) & (valid[:, :, None] != 0)
+        hit = ((dst[:, :, None] == _ids3(c * chunk, tile_r, tile_c, chunk))
+               & (valid[:, :, None] != 0))
         ok = hit & op.improves(cand[:, :, None], cur[None, None, :])
         vals = jnp.where(ok, cand[:, :, None], ident)
         prop_ref[sl] = _fold2(op.combine, prop_ref[sl],
@@ -201,60 +223,69 @@ def _init_accumulators(prop_ref, upd_ref, *, op: EdgeOp, n_pad: int):
 # ---------------------------------------------------------------------------
 
 def _lanes_kernel(dist_ref, src_ref, dst_ref, w_ref, valid_ref,
-                  prop_ref, upd_ref, imp_ref, *, op: EdgeOp, n_pad: int):
+                  prop_ref, upd_ref, imp_ref, *, op: EdgeOp, n_pad: int,
+                  tile_r: int, tile_c: int, chunk: int):
     src = src_ref[...]
     dst = dst_ref[...]
     w = w_ref[...]
     valid = valid_ref[...]
     _init_accumulators(prop_ref, upd_ref, op=op, n_pad=n_pad)
-    val_src = _onehot_gather(dist_ref, src, n_pad, op.dtype)
+    val_src = _onehot_gather(dist_ref, src, n_pad, op.dtype, tile_r=tile_r,
+                             tile_c=tile_c, chunk=chunk)
     cand = op.message(val_src, w)
     imp_ref[...] = _combine_pass(dist_ref, prop_ref, upd_ref, cand, dst,
-                                 valid, op=op, n_pad=n_pad)
+                                 valid, op=op, n_pad=n_pad, tile_r=tile_r,
+                                 tile_c=tile_c, chunk=chunk)
 
 
-@partial(jax.jit, static_argnames=("op", "interpret"))
+@partial(jax.jit, static_argnames=("op", "interpret", "tile_r", "tile_c",
+                                   "chunk"))
 def relax_lanes(dist, src, dst, w, valid, *,
                 op: EdgeOp = operators.shortest_path,
-                interpret: bool | None = None):
+                interpret: bool | None = None, tile_r: int = TILE_R,
+                tile_c: int = TILE_C, chunk: int = CHUNK):
     """One fused relax over ``L`` direct-mapped lanes.
 
     ``dist [N]``; ``src``/``dst`` (pre-clipped to ``[0, N)``), ``w`` and
-    ``valid`` are per-lane ``[L]``.  Returns ``(proposal [N], updated
-    [N] bool, improve [L] bool)`` where ``proposal`` is the monoid fold
-    of every improving candidate per destination (identity elsewhere);
-    apply it with :func:`apply_proposal`."""
+    ``valid`` are per-lane ``[L]``.  ``tile_r``/``tile_c``/``chunk``
+    are the schedule's block shapes (defaults: the module constants).
+    Returns ``(proposal [N], updated [N] bool, improve [L] bool)`` where
+    ``proposal`` is the monoid fold of every improving candidate per
+    destination (identity elsewhere); apply it with
+    :func:`apply_proposal`."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    tile = tile_r * tile_c
     n = dist.shape[0]
     L = src.shape[0]
-    n_pad = _round_up(n, CHUNK)
-    l_tiles = _round_up(L, TILE) // TILE
-    l_pad = l_tiles * TILE
+    n_pad = _round_up(n, chunk)
+    l_tiles = _round_up(L, tile) // tile
+    l_pad = l_tiles * tile
 
     dist_p = jnp.pad(dist, (0, n_pad - n), constant_values=op.identity)
 
     def lanes(x, fill, dtype):
         return (jnp.pad(x.astype(dtype), (0, l_pad - L),
                         constant_values=fill)
-                .reshape(l_tiles * TILE_R, TILE_C))
+                .reshape(l_tiles * tile_r, tile_c))
 
     src_p = lanes(src, 0, jnp.int32)
     dst_p = lanes(dst, 0, jnp.int32)
     w_p = lanes(w, 0, op.dtype)
     valid_p = lanes(valid, 0, jnp.int32)
 
-    lane_spec = pl.BlockSpec((TILE_R, TILE_C), lambda i: (i, 0))
+    lane_spec = pl.BlockSpec((tile_r, tile_c), lambda i: (i, 0))
     full = lambda m: pl.BlockSpec((m,), lambda i: (0,))
     prop, upd, imp = pl.pallas_call(
-        partial(_lanes_kernel, op=op, n_pad=n_pad),
+        partial(_lanes_kernel, op=op, n_pad=n_pad, tile_r=tile_r,
+                tile_c=tile_c, chunk=chunk),
         grid=(l_tiles,),
         in_specs=[full(n_pad), lane_spec, lane_spec, lane_spec, lane_spec],
         out_specs=[full(n_pad), full(n_pad), lane_spec],
         out_shape=[
             jax.ShapeDtypeStruct((n_pad,), op.dtype),
             jax.ShapeDtypeStruct((n_pad,), jnp.int32),
-            jax.ShapeDtypeStruct((l_tiles * TILE_R, TILE_C), jnp.int32),
+            jax.ShapeDtypeStruct((l_tiles * tile_r, tile_c), jnp.int32),
         ],
         interpret=interpret,
     )(dist_p, src_p, dst_p, w_p, valid_p)
@@ -269,64 +300,73 @@ def relax_lanes(dist, src, dst, w, valid, *,
 def _wd_kernel(prefix_ref, excl_ref, start_ref, srcid_ref, col_ref, wt_ref,
                dist_ref, prop_ref, upd_ref, imp_ref, *, op: EdgeOp,
                n_pad: int, f_pad: int, e_pad: int, f_real: int,
-               e_real: int, has_wt: bool):
+               e_real: int, has_wt: bool, tile_r: int, tile_c: int,
+               chunk: int):
+    tile = tile_r * tile_c
     pid = pl.program_id(0)
-    base = pid * TILE
+    base = pid * tile
     k = (base
-         + jax.lax.broadcasted_iota(jnp.int32, (TILE_R, TILE_C), 0) * TILE_C
-         + jax.lax.broadcasted_iota(jnp.int32, (TILE_R, TILE_C), 1))
+         + jax.lax.broadcasted_iota(jnp.int32, (tile_r, tile_c), 0) * tile_c
+         + jax.lax.broadcasted_iota(jnp.int32, (tile_r, tile_c), 1))
     _init_accumulators(prop_ref, upd_ref, op=op, n_pad=n_pad)
 
     # merge-path search: rank(k) = #{prefix entries <= k}, streamed over
-    # 128-wide prefix chunks (same broadcast-compare as find_offsets) —
+    # chunk-wide prefix chunks (same broadcast-compare as find_offsets) —
     # the node_idx array stays in registers/VMEM, never materialized.
-    rank = jnp.zeros((TILE_R, TILE_C), jnp.int32)
-    for c in range(f_pad // CHUNK):
-        chunk = prefix_ref[c * CHUNK:(c + 1) * CHUNK]
+    rank = jnp.zeros((tile_r, tile_c), jnp.int32)
+    for c in range(f_pad // chunk):
+        blk = prefix_ref[c * chunk:(c + 1) * chunk]
         rank = rank + jnp.sum(
-            (chunk[None, None, :] <= k[:, :, None]).astype(jnp.int32),
+            (blk[None, None, :] <= k[:, :, None]).astype(jnp.int32),
             axis=-1)
     i = jnp.minimum(rank, f_real - 1)
 
+    gather = partial(_onehot_gather, tile_r=tile_r, tile_c=tile_c,
+                     chunk=chunk)
     # slot tables: start offset, exclusive prefix, global source id
-    excl = _onehot_gather(excl_ref, i, f_pad, jnp.int32)
-    start = _onehot_gather(start_ref, i, f_pad, jnp.int32)
-    src = _onehot_gather(srcid_ref, i, f_pad, jnp.int32)
+    excl = gather(excl_ref, i, f_pad, jnp.int32)
+    start = gather(start_ref, i, f_pad, jnp.int32)
+    src = gather(srcid_ref, i, f_pad, jnp.int32)
 
     total = prefix_ref[f_real - 1]
     eidx = jnp.clip(start + (k - excl), 0, e_real - 1)
     valid = (k < total).astype(jnp.int32)
 
-    dst = _onehot_gather(col_ref, eidx, e_pad, jnp.int32)
+    dst = gather(col_ref, eidx, e_pad, jnp.int32)
     if has_wt:
-        w = _onehot_gather(wt_ref, eidx, e_pad, op.dtype)
+        w = gather(wt_ref, eidx, e_pad, op.dtype)
     else:
-        w = jnp.ones((TILE_R, TILE_C), op.dtype)
-    val_src = _onehot_gather(dist_ref, src, n_pad, op.dtype)
+        w = jnp.ones((tile_r, tile_c), op.dtype)
+    val_src = gather(dist_ref, src, n_pad, op.dtype)
     cand = op.message(val_src, w)
     imp_ref[...] = _combine_pass(dist_ref, prop_ref, upd_ref, cand, dst,
-                                 valid, op=op, n_pad=n_pad)
+                                 valid, op=op, n_pad=n_pad, tile_r=tile_r,
+                                 tile_c=tile_c, chunk=chunk)
 
 
-@partial(jax.jit, static_argnames=("cap_work", "op", "interpret"))
+@partial(jax.jit, static_argnames=("cap_work", "op", "interpret", "tile_r",
+                                   "tile_c", "chunk"))
 def wd_relax_lanes(dist, prefix, exclusive, start, src_ids, col, wt, *,
                    cap_work: int, op: EdgeOp = operators.shortest_path,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None, tile_r: int = TILE_R,
+                   tile_c: int = TILE_C, chunk: int = CHUNK):
     """Merge-path search + relax, fused: ``cap_work`` lanes rank
     themselves against the inclusive ``prefix [F]`` (the frontier's
     remaining-degree scan), read their edge through the per-slot
     ``start``/``exclusive``/``src_ids`` tables and the CSR ``col``/``wt``
-    arrays, and scatter-combine in VMEM.  Returns ``(proposal [N],
+    arrays, and scatter-combine in VMEM.  ``tile_r``/``tile_c``/``chunk``
+    are the schedule's block shapes.  Returns ``(proposal [N],
     updated [N] bool, improve [cap_work] bool)``."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    tile = tile_r * tile_c
     n = dist.shape[0]
     f = prefix.shape[0]
     e = col.shape[0]
-    n_pad = _round_up(n, CHUNK)
-    f_pad = _round_up(f, CHUNK)
-    e_pad = _round_up(e, CHUNK)
-    l_tiles = _round_up(cap_work, TILE) // TILE
+    n_pad = _round_up(n, chunk)
+    f_pad = _round_up(f, chunk)
+    e_pad = _round_up(e, chunk)
+    l_tiles = _round_up(cap_work, tile) // tile
 
     big = jnp.iinfo(jnp.int32).max
     dist_p = jnp.pad(dist, (0, n_pad - n), constant_values=op.identity)
@@ -337,11 +377,12 @@ def wd_relax_lanes(dist, prefix, exclusive, start, src_ids, col, wt, *,
     wt_p = (jnp.zeros((e_pad,), op.dtype) if wt is None
             else jnp.pad(wt.astype(op.dtype), (0, e_pad - e)))
 
-    lane_spec = pl.BlockSpec((TILE_R, TILE_C), lambda i: (i, 0))
+    lane_spec = pl.BlockSpec((tile_r, tile_c), lambda i: (i, 0))
     full = lambda m: pl.BlockSpec((m,), lambda i: (0,))
     prop, upd, imp = pl.pallas_call(
         partial(_wd_kernel, op=op, n_pad=n_pad, f_pad=f_pad, e_pad=e_pad,
-                f_real=f, e_real=e, has_wt=wt is not None),
+                f_real=f, e_real=e, has_wt=wt is not None, tile_r=tile_r,
+                tile_c=tile_c, chunk=chunk),
         grid=(l_tiles,),
         in_specs=[full(f_pad), full(f_pad), full(f_pad), full(f_pad),
                   full(e_pad), full(e_pad), full(n_pad)],
@@ -349,7 +390,7 @@ def wd_relax_lanes(dist, prefix, exclusive, start, src_ids, col, wt, *,
         out_shape=[
             jax.ShapeDtypeStruct((n_pad,), op.dtype),
             jax.ShapeDtypeStruct((n_pad,), jnp.int32),
-            jax.ShapeDtypeStruct((l_tiles * TILE_R, TILE_C), jnp.int32),
+            jax.ShapeDtypeStruct((l_tiles * tile_r, tile_c), jnp.int32),
         ],
         interpret=interpret,
     )(prefix_p, pad_f(exclusive), pad_f(start), pad_f(src_ids), col_p,
@@ -372,7 +413,8 @@ def apply_proposal(dist, proposal, op: EdgeOp):
 
 def apply_relax(dist, updated, src, dst, w, valid, *,
                 op: EdgeOp = operators.shortest_path,
-                interpret: bool | None = None):
+                interpret: bool | None = None, tile_r: int = TILE_R,
+                tile_c: int = TILE_C, chunk: int = CHUNK):
     """Pallas drop-in for ``repro.core.strategies._apply_relax`` — same
     signature, same returns ``(dist, updated, improve)``, same values
     bit-for-bit; the gather+message+activation+scatter-combine runs in
@@ -380,5 +422,15 @@ def apply_relax(dist, updated, src, dst, w, valid, *,
     src_c = jnp.clip(src, 0, dist.shape[0] - 1)
     dst_c = jnp.clip(dst, 0, dist.shape[0] - 1)
     prop, upd, imp = relax_lanes(dist, src_c, dst_c, w, valid, op=op,
-                                 interpret=interpret)
+                                 interpret=interpret, tile_r=tile_r,
+                                 tile_c=tile_c, chunk=chunk)
     return apply_proposal(dist, prop, op), updated | upd, imp
+
+
+def tile_kwargs(sched) -> dict:
+    """The Pallas block-shape kwargs of a
+    :class:`~repro.core.schedule.Schedule` — what the strategy/fused
+    dispatch layers forward into :func:`relax_lanes` /
+    :func:`wd_relax_lanes` / :func:`apply_relax`."""
+    return dict(tile_r=sched.tile_r, tile_c=sched.tile_c,
+                chunk=sched.chunk)

@@ -495,3 +495,64 @@ def test_live_tree_is_finding_free():
     kept, _ = apply_suppressions(findings)
     assert kept == [], "\n".join(
         f"{f.location()}: [{f.rule}] {f.message}" for f in kept)
+
+
+# ---------------------------------------------------------------------------
+# schedules pass (SC001–SC003)
+# ---------------------------------------------------------------------------
+
+def test_sc002_typo_field_flagged_with_line():
+    from repro.analysis import schedules as sched_pass
+    src = textwrap.dedent("""\
+        def lower(sched):
+            cap = sched.min_bucket
+            return sched.chnk          # typo'd chunk
+    """)
+    findings, fields_read = sched_pass.scan_file("fixture.py", text=src)
+    assert [f.rule for f in findings] == ["SC002"]
+    assert findings[0].line == 3
+    assert "chnk" in findings[0].message
+    assert fields_read == {"min_bucket"}
+
+
+def test_sc002_allows_methods_and_module_access():
+    from repro.analysis import schedules as sched_pass
+    src = textwrap.dedent("""\
+        from repro.core import schedule
+
+        def lower(work_schedule, degrees):
+            base = schedule.DEFAULT_SCHEDULE
+            resolved = work_schedule.resolved(degrees)
+            return resolved.to_json(), work_schedule.tile
+    """)
+    findings, _ = sched_pass.scan_file("fixture.py", text=src)
+    assert findings == []
+
+
+def test_sc002_ignores_non_schedule_receivers():
+    from repro.analysis import schedules as sched_pass
+    src = "x = plan.chnk + result.whatever\n"
+    findings, fields_read = sched_pass.scan_file("fixture.py", text=src)
+    assert findings == [] and fields_read == set()
+
+
+def test_sc001_dead_field_detection():
+    from repro.analysis import schedules as sched_pass
+    from repro.core.schedule import SCHEDULE_FIELDS
+    partial = set(SCHEDULE_FIELDS) - {"chunk"}
+    findings = sched_pass.check_dead_fields(partial)
+    assert [f.rule for f in findings] == ["SC001"]
+    assert "'chunk'" in findings[0].message
+    assert sched_pass.check_dead_fields(set(SCHEDULE_FIELDS)) == []
+
+
+def test_sc003_registry_round_trips_clean():
+    from repro.analysis import schedules as sched_pass
+    assert sched_pass.check_roundtrips() == []
+
+
+def test_schedules_pass_registered():
+    assert "schedules" in PASSES
+    mod = get_pass("schedules")
+    assert mod.PASS_NAME == "schedules"
+    assert mod.RULES == ("SC001", "SC002", "SC003")

@@ -406,3 +406,74 @@ def test_weight_additive_declarations():
     plan = priority.plan_delta(strat, strat.setup(ROAD), ROAD,
                                op=operators.widest_path, delta=1)
     assert not plan.heavy
+
+
+# ---------------------------------------------------------------------------
+# auto-delta clamping and Schedule-carried delta policy
+# ---------------------------------------------------------------------------
+
+def _zero_weight(g):
+    from repro.core.graph import CSRGraph
+    wt = np.zeros((g.num_edges,), np.int32)
+    return CSRGraph(g.row_ptr, g.col, jnp.asarray(wt), g.num_nodes,
+                    g.num_edges, g.max_degree)
+
+
+@pytest.mark.parametrize("strategy", ["BS", "WD"])
+def test_delta_bfs_parity_on_unweighted_graph(strategy):
+    # regression for the Δ≥1 clamp: unit weights give Δ = multiplier,
+    # and the delta run must still land on exact BFS levels
+    g = road_grid_graph(side=10, weighted=False, seed=4)
+    bsp = engine.run(g, 0, _strategy(strategy), mode="fused")
+    delta = engine.run(g, 0, _strategy(strategy), mode="fused",
+                       schedule="delta")
+    np.testing.assert_array_equal(np.asarray(delta.dist),
+                                  np.asarray(bsp.dist))
+    assert delta.delta == priority.DELTA_WEIGHT_MULTIPLIER
+
+
+@pytest.mark.parametrize("strategy", ["BS", "WD"])
+def test_delta_bfs_parity_on_zero_weight_graph(strategy):
+    # the pathological input the clamp exists for: a zero-mean weight
+    # array would yield Δ=0 and a division by zero in bucket_index;
+    # clamped to Δ=1 the run settles everything reachable at distance 0
+    g = _zero_weight(road_grid_graph(side=8, weighted=True, seed=4))
+    assert priority.auto_delta(g) == 1
+    bsp = engine.run(g, 0, _strategy(strategy), mode="fused")
+    delta = engine.run(g, 0, _strategy(strategy), mode="fused",
+                       schedule="delta")
+    np.testing.assert_array_equal(np.asarray(delta.dist),
+                                  np.asarray(bsp.dist))
+    assert delta.delta == 1
+
+
+def test_auto_delta_multiplier_clamps():
+    # multiplier is itself clamped to >= 1, so even an absurd caller
+    # value cannot produce Δ=0
+    assert priority.auto_delta(ROAD, multiplier=0) >= 1
+    assert priority.auto_delta(ROAD, multiplier=-3) >= 1
+    g0 = _zero_weight(ROAD)
+    assert priority.auto_delta(g0, multiplier=100) == 1
+
+
+def test_schedule_object_carries_delta_policy():
+    from repro.core.schedule import Schedule
+    pinned = engine.run(
+        ROAD, 0, engine.make_strategy("WD", schedule=Schedule(delta=7)),
+        mode="fused", schedule="delta")
+    assert pinned.delta == 7
+    doubled = engine.run(
+        ROAD, 0,
+        engine.make_strategy("WD", schedule=Schedule(delta_multiplier=2)),
+        mode="fused", schedule="delta")
+    assert doubled.delta == priority.auto_delta(ROAD, multiplier=2)
+    # the engine-level kwarg still wins over the schedule's policy
+    explicit = engine.run(
+        ROAD, 0, engine.make_strategy("WD", schedule=Schedule(delta=7)),
+        mode="fused", schedule="delta", delta=9)
+    assert explicit.delta == 9
+    # and whichever won, the fixed point is the same
+    base = engine.run(ROAD, 0, _strategy("WD"), mode="fused")
+    for r in (pinned, doubled, explicit):
+        np.testing.assert_array_equal(np.asarray(r.dist),
+                                      np.asarray(base.dist))
