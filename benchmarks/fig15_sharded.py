@@ -19,7 +19,14 @@ and road (bounded-degree) families over S ∈ {1, 2, 4, 8} and reports:
   (``S · N · 4`` bytes), so the sparse-vs-dense exchange gap is visible
   in the table;
 * a parity assertion: every sharded run must be bit-identical (dist,
-  iterations, edges) to the single-device fused run.
+  iterations, edges) to the single-device fused run;
+* the **backend axis** (docs/backends.md): every row carries a
+  ``backend`` field, and ``backend="pallas"`` rows re-run the same
+  sharded traversal through the per-shard Pallas kernels with the
+  epilogue-fused ghost combine, parity-asserted against the *same*
+  single-device base.  Pallas rows run in interpret mode on CPU (grid
+  serialized in the emulator), so they use a reduced shard set — their
+  absolute times price emulation, not TPU kernel quality.
 
 Honesty note: the shards here are *virtual* host devices carved out of
 one CPU (``XLA_FLAGS=--xla_force_host_platform_device_count=8``), so
@@ -40,6 +47,9 @@ import sys
 from benchmarks.common import csv_line, fmt_rate, save_result
 
 SHARD_COUNTS = [1, 2, 4, 8]
+#: interpret-mode Pallas serializes the kernel grid, so the pallas leg
+#: prices the endpoints of the shard axis rather than the full sweep
+PALLAS_SHARD_COUNTS = [1, 8]
 
 _CHILD = r"""
 import os
@@ -53,6 +63,7 @@ from repro.core import engine, shard
 from repro.data import rmat_graph, road_grid_graph
 
 SHARD_COUNTS = %s
+PALLAS_SHARD_COUNTS = %s
 GRAPHS = {
     "rmat": lambda: rmat_graph(scale=10, edge_factor=8, weighted=True,
                                seed=7),
@@ -64,34 +75,39 @@ for gname, make in GRAPHS.items():
     g = make()
     source = int(np.argmax(np.asarray(g.degrees)))
     base = None
-    for s_count in SHARD_COUNTS:
-        _, info = shard.partition(g, s_count, method="degree")
-        best = None
-        for i in range(3):                     # warm-up + best-of-2
-            res = engine.run(g, source, engine.make_strategy("WD"),
-                             mode="fused", shards=s_count)
-            if i and (best is None
-                      or res.traversal_seconds < best.traversal_seconds):
-                best = res
-        if base is None:
-            base = best
-        assert np.array_equal(best.dist, base.dist), f"{gname}/{s_count}"
-        assert best.iterations == base.iterations
-        assert best.edges_relaxed == base.edges_relaxed
-        rows.append({
-            "graph": gname, "shards": s_count,
-            "iterations": best.iterations,
-            "edges_relaxed": best.edges_relaxed,
-            "traversal_s": best.traversal_seconds,
-            "setup_s": best.setup_seconds,
-            "mteps": safe_mteps(best),
-            "cut_share": info.cut_share,
-            "halo_bytes": info.halo_bytes,
-            "replica_exchange_bytes": 4 * g.num_nodes * s_count,
-            "edge_imbalance": info.edge_imbalance,
-        })
+    for backend in ("xla", "pallas"):
+        counts = SHARD_COUNTS if backend == "xla" else PALLAS_SHARD_COUNTS
+        for s_count in counts:
+            _, info = shard.partition(g, s_count, method="degree")
+            best = None
+            for i in range(3):                 # warm-up + best-of-2
+                res = engine.run(g, source, engine.make_strategy("WD"),
+                                 mode="fused", shards=s_count,
+                                 backend=backend)
+                if i and (best is None
+                          or res.traversal_seconds
+                          < best.traversal_seconds):
+                    best = res
+            if base is None:
+                base = best
+            tag = f"{gname}/{backend}/{s_count}"
+            assert np.array_equal(best.dist, base.dist), tag
+            assert best.iterations == base.iterations, tag
+            assert best.edges_relaxed == base.edges_relaxed, tag
+            rows.append({
+                "graph": gname, "backend": backend, "shards": s_count,
+                "iterations": best.iterations,
+                "edges_relaxed": best.edges_relaxed,
+                "traversal_s": best.traversal_seconds,
+                "setup_s": best.setup_seconds,
+                "mteps": safe_mteps(best),
+                "cut_share": info.cut_share,
+                "halo_bytes": info.halo_bytes,
+                "replica_exchange_bytes": 4 * g.num_nodes * s_count,
+                "edge_imbalance": info.edge_imbalance,
+            })
 print(json.dumps({"rows": rows}))
-""" % SHARD_COUNTS
+""" % (SHARD_COUNTS, PALLAS_SHARD_COUNTS)
 
 
 def run(verbose: bool = True):
@@ -112,7 +128,8 @@ def run(verbose: bool = True):
                    f"halo_kb={r['halo_bytes'] / 1024:.1f};"
                    f"edge_imbalance={r['edge_imbalance']:.2f}")
         lines.append(csv_line(
-            f"fig15_sharded/{r['graph']}/shards{r['shards']}",
+            f"fig15_sharded/{r['graph']}/{r['backend']}"
+            f"/shards{r['shards']}",
             r["traversal_s"] * 1e6, derived))
     if verbose:
         print("\n".join(lines))

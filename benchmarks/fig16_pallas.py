@@ -18,9 +18,22 @@ not TPU kernel quality.  On a real TPU backend the same entry points
 compile through Mosaic.  Graphs are sized below the main suite for the
 same reason (grid serialization is O(lanes), and the parity signal is
 scale-independent).
+
+Every row carries a ``shards`` field.  The single-device matrix above
+runs in-process (``shards=1``); a second **sharded** section re-runs WD
+at ``shards=8`` for both backends in a measurement subprocess (the
+device-count flag must be set before jax initializes —
+docs/sharding.md), parity-asserted against the single-device run, so
+the artifact exposes the full backend × shards axis the parity contract
+covers (docs/backends.md).
 """
 
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
 
 import numpy as np
 
@@ -39,6 +52,78 @@ FIG16_GRAPHS = {
 #: add memory/morph axes fig9-11 already cover; AD composes the other
 #: three and reports its kernel schedule)
 FIG16_STRATEGIES = ["BS", "WD", "HP", "AD"]
+#: shard width for the sharded section (docs/backends.md
+#: #sharded-pallas-the-fused-ghost-combine); WD only — fig15 owns the
+#: shard-count sweep, this section prices the backend axis at width
+FIG16_SHARDS = 8
+
+_SHARDED_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import json
+import numpy as np
+from benchmarks.common import safe_mteps
+from repro.core import engine
+from repro.data import rmat_graph, road_grid_graph
+
+SHARDS = %d
+GRAPHS = {
+    "rmat": lambda: rmat_graph(scale=9, edge_factor=8, weighted=True,
+                               seed=7),
+    "road": lambda: road_grid_graph(side=24, weighted=True, seed=7),
+}
+
+rows = []
+for gname, make in GRAPHS.items():
+    g = make()
+    source = int(np.argmax(np.asarray(g.degrees)))
+    base = engine.run(g, source, engine.make_strategy("WD"), mode="fused")
+    runs = {}
+    for backend in ("xla", "pallas"):
+        best = None
+        for i in range(2):                     # warm-up (compile) + timed
+            res = engine.run(g, source, engine.make_strategy("WD"),
+                             mode="fused", shards=SHARDS, backend=backend)
+            best = res if i else None
+        tag = f"{gname}/{backend}"
+        assert np.array_equal(best.dist, base.dist), tag
+        assert best.iterations == base.iterations, tag
+        assert best.edges_relaxed == base.edges_relaxed, tag
+        runs[backend] = best
+    xla, pallas = runs["xla"], runs["pallas"]
+    rows.append({
+        "graph": gname, "strategy": "WD", "shards": SHARDS,
+        "iterations": xla.iterations,
+        "edges_relaxed": xla.edges_relaxed,
+        "xla_s": xla.traversal_seconds,
+        "pallas_s": pallas.traversal_seconds,
+        "mteps_xla": safe_mteps(xla),
+        "mteps_pallas": safe_mteps(pallas),
+        "pallas_over_xla": (
+            pallas.traversal_seconds / xla.traversal_seconds
+            if xla.traversal_seconds > 0 else 0.0),
+        "parity": "bit-identical",
+    })
+print(json.dumps({"rows": rows}))
+""" % FIG16_SHARDS
+
+
+def _sharded_rows():
+    """WD backend pair at ``shards=FIG16_SHARDS``, measured in a
+    subprocess (8 virtual devices), same row schema plus ``shards``."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src"
+    root = os.path.join(os.path.dirname(__file__), "..")
+    out = subprocess.run([sys.executable, "-c", _SHARDED_CHILD], cwd=root,
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f"fig16 sharded child failed:\n"
+                           f"{out.stderr[-3000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])["rows"]
 
 
 def run(verbose: bool = True):
@@ -58,7 +143,7 @@ def run(verbose: bool = True):
             assert pallas.edges_relaxed == xla.edges_relaxed, (
                 f"pallas edge total diverged for {s} on {gname}")
             rows.append({
-                "graph": gname, "strategy": s,
+                "graph": gname, "strategy": s, "shards": 1,
                 "iterations": xla.iterations,
                 "edges_relaxed": xla.edges_relaxed,
                 "xla_s": xla.traversal_seconds,
@@ -71,6 +156,8 @@ def run(verbose: bool = True):
                 "parity": "bit-identical",
             })
 
+    rows.extend(_sharded_rows())
+
     save_result("fig16_pallas", {"rows": rows})
     lines = []
     for r in rows:
@@ -79,7 +166,8 @@ def run(verbose: bool = True):
                    f"pallas_over_xla={r['pallas_over_xla']:.2f}x;"
                    f"parity={r['parity']}")
         lines.append(csv_line(
-            f"fig16_pallas/{r['graph']}/{r['strategy']}",
+            f"fig16_pallas/{r['graph']}/{r['strategy']}"
+            f"/shards{r['shards']}",
             r["pallas_s"] * 1e6, derived))
     if verbose:
         print("\n".join(lines))

@@ -89,7 +89,7 @@ def check_strategy(name: str, cls) -> list:
     lowerings that would back them.  Usable on unregistered fixtures."""
     from repro.core import strategies
     from repro.core.fused import fused_kernel_name
-    from repro.core.shard import SHARDED_KERNELS
+    from repro.core.shard import SHARDED_KERNELS, SHARDED_STEPS
 
     file, line = _anchor(cls)
     findings: list = []
@@ -152,6 +152,31 @@ def check_strategy(name: str, cls) -> list:
                 f"XLA",
                 "thread backend=... through iterate/relax_and_push to "
                 "every kernel, or drop the flag")
+
+    if (strategies.PALLAS_BACKEND in caps and strategies.SHARDABLE in caps
+            and kernel in SHARDED_KERNELS):
+        # the pallas × shards cell: both flags together promise the
+        # SHARDED lowering honors backend="pallas" too — probe the step
+        # function recorded in shard.SHARDED_STEPS for the backend
+        # parameter the relax dispatch threads through
+        step = SHARDED_STEPS.get(kernel)
+        ok = False
+        if step is not None:
+            try:
+                ok = "backend" in inspect.signature(step).parameters
+            except (TypeError, ValueError):
+                ok = True  # uninspectable (C callable) — give benefit
+        if not ok:
+            finding(
+                "CP001",
+                f"strategy {name!r} declares both SHARDABLE and "
+                f"PALLAS_BACKEND but the sharded step for kernel "
+                f"{kernel!r} (shard.SHARDED_STEPS) takes no ``backend`` "
+                f"parameter — engine.run(..., backend='pallas', shards=) "
+                f"would silently run the XLA lowering per-shard",
+                "thread backend=... through the shard step into the relax "
+                "dispatch (repro.core.shard._relax_chunk), or drop one "
+                "flag")
 
     if strategies.FRONTIER_INIT in caps:
         has_iterate = entry_name == "iterate"

@@ -159,17 +159,19 @@ def _check_sharding(strategy: StrategyBase, mode: str,
 def _check_backend(strategy: Optional[StrategyBase], backend: str,
                    shards: Optional[int]) -> None:
     """Validate a ``backend=`` request (shared by run/fixed_point and,
-    with ``strategy=None``, by the WD-only batch driver)."""
+    with ``strategy=None``, by the WD-only batch driver).
+
+    ``shards`` no longer restricts the backend: every SHARDABLE
+    strategy's Pallas lowering runs per-shard under ``shard_map`` with
+    the ghost combine fused into the kernel epilogue
+    (:mod:`repro.core.shard`, docs/backends.md) — the sharding gate
+    itself lives in :func:`_check_sharding`."""
+    del shards
     if backend not in BACKENDS:
         raise ValueError(
             f"backend must be one of {BACKENDS}, got {backend!r}")
     if backend == "xla":
         return
-    if shards is not None:
-        raise ValueError(
-            "backend='pallas' is single-device; the sharded kernels in "
-            "repro.core.shard run the XLA lowering under shard_map — "
-            "drop shards= or use backend='xla' (docs/backends.md)")
     if strategy is not None and PALLAS_BACKEND not in strategy.capabilities:
         raise ValueError(
             f"strategy {strategy.name!r} does not declare the "
@@ -260,11 +262,12 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
     counts).
 
     ``backend="pallas"`` (strategies declaring
-    :data:`repro.core.strategies.PALLAS_BACKEND`; single-device only)
-    dispatches every relax through the fused scatter-combine kernels of
+    :data:`repro.core.strategies.PALLAS_BACKEND`) dispatches every
+    relax through the fused scatter-combine kernels of
     :mod:`repro.kernels.relax` instead of XLA gather/scatter —
-    bit-identical dist/iterations/edges in both modes
-    (docs/backends.md).
+    bit-identical dist/iterations/edges in both modes, and it composes
+    with ``shards=``: the kernels run per-shard with the ghost combine
+    fused into the kernel epilogue (docs/backends.md).
 
     ``schedule="delta"`` (strategies declaring
     :data:`repro.core.strategies.PRIORITY_SCHEDULE`; idempotent
@@ -335,7 +338,7 @@ def run(graph: CSRGraph, source: int, strategy: StrategyBase, *,
         if splan is not None:
             dist, iterations, edges, rounds = _shard.run_fixed_point(
                 splan, dist, mask, op=op, max_iterations=max_iterations,
-                async_mode=async_shards)
+                async_mode=async_shards, backend=backend)
         elif dplan is not None:
             dist, iterations, rounds, edges = _priority.run_fixed_point(
                 dplan, dist, mask, op=op, max_iterations=max_iterations,
@@ -504,7 +507,7 @@ def fixed_point(graph: CSRGraph, strategy: StrategyBase, init, *,
                                    method=partition)
         dist, it, edges, _rounds = _shard.run_fixed_point(
             splan, dist, mask, op=op, max_iterations=max_iterations,
-            async_mode=async_shards)
+            async_mode=async_shards, backend=backend)
     elif schedule == "delta":
         dplan = _priority.plan_delta(strategy, state, graph, op=op,
                                      delta=delta)
@@ -553,7 +556,7 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
     so single-source and batched entry points live side by side.
     ``shards=S`` (fused mode only) shards the graph over S devices and
     vmaps the sharded WD step over the source axis (docs/sharding.md);
-    ``backend="pallas"`` (single-device) swaps the relax lowering
+    ``backend="pallas"`` swaps the relax lowering, sharded or not
     (docs/backends.md); ``schedule="delta"`` (fused mode only) vmaps
     whole per-row delta-stepping traversals (docs/scheduling.md);
     ``pad_to=P`` K-buckets the batch onto a shared [P, N] executable

@@ -175,8 +175,8 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
     partitions the graph over S devices and vmaps the *sharded* WD step
     over the source axis — bit-identical dist/iterations/edges to the
     single-device batch (:mod:`repro.core.shard`, docs/sharding.md).
-    ``backend="pallas"`` (single-device) routes every row's WD relax
-    through the fused Pallas kernel — bit-identical again
+    ``backend="pallas"`` routes every row's WD relax through the fused
+    Pallas kernel — bit-identical again, sharded or not
     (docs/backends.md).  ``schedule="delta"`` (fused mode, single
     device, idempotent operators) runs every row as its own
     delta-stepping traversal — rows settle different buckets in the
@@ -270,12 +270,12 @@ def run_batch(graph: CSRGraph, sources, *, max_iterations: int = 100000,
         mesh = shard.shard_mesh(shards)
         dist_b, iterations, edges = shard.run_batch_fixed_point(
             sharded, dist_b, mask_b, mesh=mesh, op=op,
-            max_iterations=max_iterations)
+            max_iterations=max_iterations, sched=sched, backend=backend)
         total_s = time.perf_counter() - t0
         return BatchRunResult(dist=np.asarray(dist_b), sources=sources,
                               iterations=iterations, total_seconds=total_s,
                               edges_relaxed=edges, iter_stats=[],
-                              mode="fused", shards=shards,
+                              mode="fused", shards=shards, backend=backend,
                               pad_lanes=pad_lanes)
 
     if mode == "fused":

@@ -40,6 +40,23 @@ exact, not approximate: integer monoids fold associatively, so splitting
 one scatter batch by edge owner and folding across shards reproduces the
 single-device scatter bit-for-bit.
 
+Both relax **backends** run per-shard (docs/backends.md).  The default
+XLA lowering scatters into the local replica and the chunk-boundary
+combine folds whole replicas (:func:`_combine`).  ``backend="pallas"``
+dispatches the same fused VMEM kernels the single-device engine uses
+(:mod:`repro.kernels.relax`) and fuses the ghost combine into the
+kernel **epilogue**: the kernel's dense proposal — the monoid fold of
+improving candidates per destination, identity elsewhere — is folded
+across shards (``pmin``/``pmax``/``psum``,
+:func:`_combine_proposal`) *before* the single elementwise
+``apply_proposal``, at exactly the chunk boundaries listed above.
+Because the monoid is associative, folding proposals first is
+bit-identical to folding post-scatter replicas
+(``fold_s(combine(base, prop_s)) == combine(base, fold_s(prop_s))``
+for min/max; for ``add`` the local delta *is* the proposal), so the
+parity contract holds across the whole backend × shards matrix —
+tests/test_sharded.py and tests/test_backends.py enforce it.
+
 Capability gating: only strategies declaring
 :data:`repro.core.strategies.SHARDABLE` (BS, WD, HP, NS) accept
 ``shards=``.  EP stays single-device — its COO edge worklist is a
@@ -73,12 +90,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import operators
-from repro.core.fused import (DISPATCH_COUNTS, TRACE_COUNTS, _limb_add,
-                              _LIMB, _plan)
+from repro.core.fused import (DISPATCH_COUNTS, TRACE_COUNTS, _count_key,
+                              _limb_add, _LIMB, _plan)
 from repro.core.graph import CSRGraph
 from repro.core.operators import EdgeOp
 from repro.core.schedule import DEFAULT_SCHEDULE, Schedule
-from repro.core.strategies import _apply_relax
+from repro.core.strategies import _apply_relax, pallas_relax_module
 
 #: mesh axis name of the 1-D shard partition
 AXIS = "shard"
@@ -328,6 +345,51 @@ def _maybe_combine(op: EdgeOp, base, dist, sync: bool):
     return _combine(op, base, dist) if sync else dist
 
 
+def _combine_proposal(op: EdgeOp, prop):
+    """Fold per-shard dense *proposals* across shards — the Pallas
+    path's ghost combine, fused into the kernel epilogue.
+
+    A proposal carries the monoid identity for untouched destinations,
+    so whole-proposal folds are exact for every built-in combine
+    (``add`` included: the local post-scatter delta equals the
+    proposal, so ``psum`` of proposals is the delta fold
+    :func:`_combine` computes).  Folding proposals *before* the one
+    elementwise ``apply_proposal`` is bit-identical to folding the
+    post-scatter replicas, by associativity of the monoid."""
+    if op.combine == "min":
+        return lax.pmin(prop, AXIS)
+    if op.combine == "max":
+        return lax.pmax(prop, AXIS)
+    return lax.psum(prop, AXIS)
+
+
+def _relax_chunk(dist, updated, src, dst, w, valid, *, op: EdgeOp,
+                 backend: str, sched: Schedule, sync: bool):
+    """One direct-mapped relax batch + its chunk-boundary ghost combine,
+    dispatched per backend (the sharded analogue of
+    ``strategies.relax_fn``).
+
+    XLA scatters into the local replica and folds replicas
+    (:func:`_maybe_combine`); Pallas runs the fused
+    ``relax_lanes`` kernel and folds its dense proposal across shards
+    (:func:`_combine_proposal`) before one ``apply_proposal`` — the
+    fused-epilogue combine.  ``sync=False`` (async mode) skips the fold
+    either way: the relax commits to the local replica only."""
+    if backend == "pallas":
+        relax = pallas_relax_module()
+        hi = dist.shape[0] - 1
+        prop, upd, _ = relax.relax_lanes(
+            dist, jnp.clip(src, 0, hi), jnp.clip(dst, 0, hi), w, valid,
+            op=op, **relax.tile_kwargs(sched))
+        if sync:
+            prop = _combine_proposal(op, prop)
+        return relax.apply_proposal(dist, prop, op), updated | upd
+    base = dist
+    dist, updated, _ = _apply_relax(dist, updated, src, dst, w, valid,
+                                    op=op)
+    return _maybe_combine(op, base, dist, sync), updated
+
+
 def _any_across(updated):
     """OR a per-shard boolean mask across shards."""
     return lax.psum(updated.astype(jnp.int32), AXIS) > 0
@@ -350,15 +412,31 @@ def _local_frontier(sq: ShardedCSRGraph, mask):
 
 
 def _merge_path_local(sq: ShardedCSRGraph, dist, updated, gids, work,
-                      cursor=None, *, op: EdgeOp, sync: bool = True):
+                      cursor=None, *, op: EdgeOp, backend: str = "xla",
+                      sched: Schedule = DEFAULT_SCHEDULE,
+                      sync: bool = True):
     """One merge-path relax over this shard's ``Emax`` edge lanes +
     cross-shard combine — the sharded analogue of
     ``fused._merge_path_relax`` (single chunk, so one combine).
-    ``sync=False`` (async mode) skips the combine: the relax commits to
-    the local replica only."""
+    ``backend="pallas"`` fuses the search and the relax in one
+    ``wd_relax_lanes`` kernel (the rank/eidx/valid construction inside
+    the kernel is the same searchsorted arithmetic as below, so lanes
+    resolve identically) and folds the proposal across shards in the
+    epilogue.  ``sync=False`` (async mode) skips the combine: the relax
+    commits to the local replica only."""
     prefix = jnp.cumsum(work)
-    exclusive = prefix - work
     total = prefix[-1]
+    if backend == "pallas":
+        relax = pallas_relax_module()
+        start = (sq.row_ptr[:-1] if cursor is None
+                 else sq.row_ptr[:-1] + cursor)
+        prop, upd, _ = relax.wd_relax_lanes(
+            dist, prefix, prefix - work, start, gids, sq.col, sq.wt,
+            cap_work=sq.edges_per_shard, op=op, **relax.tile_kwargs(sched))
+        if sync:
+            prop = _combine_proposal(op, prop)
+        return relax.apply_proposal(dist, prop, op), updated | upd, total
+    exclusive = prefix - work
     k = jnp.arange(sq.edges_per_shard, dtype=jnp.int32)
     ni = jnp.clip(jnp.searchsorted(prefix, k, side="right").astype(jnp.int32),
                   0, work.shape[0] - 1)
@@ -374,6 +452,7 @@ def _merge_path_local(sq: ShardedCSRGraph, dist, updated, gids, work,
 
 
 def _bs_step(sq: ShardedCSRGraph, dist, mask, *, op: EdgeOp,
+             backend: str = "xla", sched: Schedule = DEFAULT_SCHEDULE,
              sync: bool = True):
     """Sharded dense BS: owned lanes walk their adjacency lists in
     lockstep columns; the column count is the *global* frontier max
@@ -393,11 +472,10 @@ def _bs_step(sq: ShardedCSRGraph, dist, mask, *, op: EdgeOp,
         d, dist, updated = c
         valid = d < deg
         eidx = jnp.clip(sq.row_ptr[:-1] + d, 0, sq.edges_per_shard - 1)
-        base = dist
-        dist, updated, _ = _apply_relax(
+        dist, updated = _relax_chunk(
             dist, updated, gids, sq.col[eidx], _local_weight(sq, eidx),
-            valid, op=op)
-        return d + 1, _maybe_combine(op, base, dist, sync), updated
+            valid, op=op, backend=backend, sched=sched, sync=sync)
+        return d + 1, dist, updated
 
     _, dist, updated = lax.while_loop(cond, body,
                                       (jnp.int32(0), dist, updated))
@@ -405,19 +483,21 @@ def _bs_step(sq: ShardedCSRGraph, dist, mask, *, op: EdgeOp,
 
 
 def _wd_step(sq: ShardedCSRGraph, dist, mask, *, op: EdgeOp,
+             backend: str = "xla", sched: Schedule = DEFAULT_SCHEDULE,
              sync: bool = True):
     """Sharded dense WD: one merge-path batch per shard, one combine per
     iteration (WD's single chunk)."""
     gids, deg, _ = _local_frontier(sq, mask)
     updated = jnp.zeros_like(mask)
     dist, updated, _ = _merge_path_local(sq, dist, updated, gids, deg, op=op,
+                                         backend=backend, sched=sched,
                                          sync=sync)
     return dist, updated, jnp.sum(deg)
 
 
 def _hp_step(sq: ShardedCSRGraph, dist, mask, *,
              sched: Schedule = DEFAULT_SCHEDULE, op: EdgeOp,
-             sync: bool = True):
+             backend: str = "xla", sync: bool = True):
     """Sharded dense HP: the hybrid's branch predicate and the inner
     tile loop's trip count are computed from ``psum``-global counts so
     all shards stay in lockstep; the combine runs per MDT tile (HP's
@@ -434,7 +514,8 @@ def _hp_step(sq: ShardedCSRGraph, dist, mask, *,
     def small(dist):
         updated = jnp.zeros_like(mask)
         dist, updated, _ = _merge_path_local(sq, dist, updated, gids, deg,
-                                             op=op, sync=sync)
+                                             op=op, backend=backend,
+                                             sched=sched, sync=sync)
         return dist, updated
 
     def big(dist):
@@ -459,12 +540,11 @@ def _hp_step(sq: ShardedCSRGraph, dist, mask, *,
                             0, sq.edges_per_shard - 1).reshape(-1)
             src = jnp.broadcast_to(gids[:, None],
                                    (n_lanes, mdt)).reshape(-1)
-            base = dist
-            dist, updated, _ = _apply_relax(
+            dist, updated = _relax_chunk(
                 dist, updated, src, sq.col[eidx], _local_weight(sq, eidx),
-                valid.reshape(-1), op=op)
-            return (i + 1, cursor + mdt,
-                    _maybe_combine(op, base, dist, sync), updated)
+                valid.reshape(-1), op=op, backend=backend, sched=sched,
+                sync=sync)
+            return i + 1, cursor + mdt, dist, updated
 
         cursor0 = jnp.zeros((n_lanes,), jnp.int32)
         upd0 = jnp.zeros_like(mask)
@@ -473,7 +553,8 @@ def _hp_step(sq: ShardedCSRGraph, dist, mask, *,
 
         rem = jnp.maximum(deg - cursor, 0)
         dist, updated, _ = _merge_path_local(sq, dist, updated, gids, rem,
-                                             cursor, op=op, sync=sync)
+                                             cursor, op=op, backend=backend,
+                                             sched=sched, sync=sync)
         return dist, updated
 
     dist, updated = lax.cond(count <= switch_threshold, small, big, dist)
@@ -481,13 +562,23 @@ def _hp_step(sq: ShardedCSRGraph, dist, mask, *,
 
 
 def _ns_step(sq: ShardedCSRGraph, child_parent, dist, mask, *, op: EdgeOp,
+             backend: str = "xla", sched: Schedule = DEFAULT_SCHEDULE,
              sync: bool = True):
     """Sharded dense NS: the parent→child mirror is a gather on the
     replicated arrays (identical on every shard, no combine needed),
     then sharded BS on the split graph."""
     dist = dist[child_parent]
     mask = mask | mask[child_parent]
-    return _bs_step(sq, dist, mask, op=op, sync=sync)
+    return _bs_step(sq, dist, mask, op=op, backend=backend, sched=sched,
+                    sync=sync)
+
+
+#: kernel -> lockstep step function of the sharded lowering.  The
+#: structural record the ``capabilities`` analysis pass (CP001) probes:
+#: a kernel's sharded lowering honors ``backend="pallas"`` iff its step
+#: takes a ``backend`` parameter to thread into the relax dispatch.
+SHARDED_STEPS = {"BS": _bs_step, "WD": _wd_step, "HP": _hp_step,
+                 "NS": _ns_step}
 
 
 # ---------------------------------------------------------------------------
@@ -495,18 +586,23 @@ def _ns_step(sq: ShardedCSRGraph, child_parent, dist, mask, *, op: EdgeOp,
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=(
-    "kernel", "max_iterations", "sched", "op", "mesh"))
+    "kernel", "max_iterations", "sched", "op", "mesh", "backend"))
 def _sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
                          kernel: str, max_iterations: int,
                          sched: Schedule = DEFAULT_SCHEDULE,
-                         op: EdgeOp = operators.shortest_path, mesh=None):
+                         op: EdgeOp = operators.shortest_path, mesh=None,
+                         backend: str = "xla"):
     """Whole sharded traversal: one dispatch, S devices.
 
     ``dist``/``mask`` are replicated ``[N]`` arrays; the graph stack is
-    split over :data:`AXIS`.  The carry mirrors ``fused._fixed_point``
-    minus the AD tally; per-shard edge limbs are ``psum``-folded once
-    after the loop so each edge is counted exactly once."""
-    TRACE_COUNTS[f"shard:{kernel}"] += 1
+    split over :data:`AXIS`.  ``backend`` picks the per-shard relax
+    lowering (XLA scatter vs the Pallas fused kernels with the
+    proposal-fold epilogue — see module docstring); both produce
+    bit-identical dist/iterations/edges.  The carry mirrors
+    ``fused._fixed_point`` minus the AD tally; per-shard edge limbs are
+    ``psum``-folded once after the loop so each edge is counted exactly
+    once."""
+    TRACE_COUNTS[f"shard:{_count_key(kernel, backend)}"] += 1
 
     def body(sg_blk, aux, dist, mask):
         sq = _squeeze(sg_blk)
@@ -518,13 +614,17 @@ def _sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
         def loop_body(c):
             it, dist, mask, e_hi, e_lo = c
             if kernel == "BS":
-                dist, upd, e = _bs_step(sq, dist, mask, op=op)
+                dist, upd, e = _bs_step(sq, dist, mask, op=op,
+                                        backend=backend, sched=sched)
             elif kernel == "WD":
-                dist, upd, e = _wd_step(sq, dist, mask, op=op)
+                dist, upd, e = _wd_step(sq, dist, mask, op=op,
+                                        backend=backend, sched=sched)
             elif kernel == "HP":
-                dist, upd, e = _hp_step(sq, dist, mask, sched=sched, op=op)
+                dist, upd, e = _hp_step(sq, dist, mask, sched=sched, op=op,
+                                        backend=backend)
             elif kernel == "NS":
-                dist, upd, e = _ns_step(sq, aux, dist, mask, op=op)
+                dist, upd, e = _ns_step(sq, aux, dist, mask, op=op,
+                                        backend=backend, sched=sched)
             else:  # pragma: no cover - guarded by plan_shards
                 raise ValueError(f"unknown sharded kernel {kernel!r}")
             e_hi, e_lo = _limb_add(e_hi, e_lo, e)
@@ -542,12 +642,12 @@ def _sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
 
 
 @partial(jax.jit, static_argnames=(
-    "kernel", "max_iterations", "sched", "op", "mesh"))
+    "kernel", "max_iterations", "sched", "op", "mesh", "backend"))
 def _async_sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
                                kernel: str, max_iterations: int,
                                sched: Schedule = DEFAULT_SCHEDULE,
                                op: EdgeOp = operators.shortest_path,
-                               mesh=None):
+                               mesh=None, backend: str = "xla"):
     """Asynchronous sharded traversal: shards run ahead between combines.
 
     Each outer **epoch**, every shard drains its *owned* frontier to a
@@ -566,7 +666,7 @@ def _async_sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
     every shard agrees on the trip count and the per-epoch collectives
     stay aligned.  Returns ``(dist, epochs, e_hi, e_lo, rounds)`` with
     ``rounds`` the deepest shard's summed inner-loop trips."""
-    TRACE_COUNTS[f"shard-async:{kernel}"] += 1
+    TRACE_COUNTS[f"shard-async:{_count_key(kernel, backend)}"] += 1
 
     def body(sg_blk, aux, dist, mask):
         sq = _squeeze(sg_blk)
@@ -582,14 +682,17 @@ def _async_sharded_fixed_point(sg: ShardedCSRGraph, aux, dist0, mask0, *,
 
         def local_step(dist, mask):
             if kernel == "BS":
-                return _bs_step(sq, dist, mask, op=op, sync=False)
+                return _bs_step(sq, dist, mask, op=op, backend=backend,
+                                sched=sched, sync=False)
             if kernel == "WD":
-                return _wd_step(sq, dist, mask, op=op, sync=False)
+                return _wd_step(sq, dist, mask, op=op, backend=backend,
+                                sched=sched, sync=False)
             if kernel == "HP":
                 return _hp_step(sq, dist, mask, sched=sched, op=op,
-                                sync=False)
+                                backend=backend, sync=False)
             if kernel == "NS":
-                return _ns_step(sq, aux, dist, mask, op=op, sync=False)
+                return _ns_step(sq, aux, dist, mask, op=op, backend=backend,
+                                sched=sched, sync=False)
             raise ValueError(  # pragma: no cover - guarded by plan_shards
                 f"unknown sharded kernel {kernel!r}")
 
@@ -672,29 +775,32 @@ def plan_shards(strategy, state, graph: CSRGraph, num_shards: int, *,
 def run_fixed_point(splan: ShardedPlan, dist0, mask0, *,
                     op: EdgeOp = operators.shortest_path,
                     max_iterations: int = 100000,
-                    async_mode: bool = False):
+                    async_mode: bool = False, backend: str = "xla"):
     """Run one planned sharded traversal (dispatch-counted like
     :func:`repro.core.fused.run_fixed_point`).  Returns
     ``(dist, iterations, edges_relaxed, relax_rounds)`` with ``dist`` on
-    device.  Lockstep mode (the default) keeps the bit-parity contract
-    with the single-device paths and reports ``relax_rounds ==
-    iterations``; ``async_mode=True`` lets shards run ahead between halo
-    combines (:func:`_async_sharded_fixed_point`) — ``iterations`` then
-    counts combine epochs and ``relax_rounds`` the deepest shard's local
-    relax rounds."""
+    device.  ``backend`` picks the per-shard relax lowering (XLA keys
+    keep their historical bare counter names, exactly as in
+    ``fused._count_key``).  Lockstep mode (the default) keeps the
+    bit-parity contract with the single-device paths and reports
+    ``relax_rounds == iterations``; ``async_mode=True`` lets shards run
+    ahead between halo combines (:func:`_async_sharded_fixed_point`) —
+    ``iterations`` then counts combine epochs and ``relax_rounds`` the
+    deepest shard's local relax rounds."""
     aux = (jnp.zeros((1,), jnp.int32) if splan.aux is None else splan.aux)
     if async_mode:
-        DISPATCH_COUNTS[f"shard-async:{splan.kernel}"] += 1
+        DISPATCH_COUNTS[f"shard-async:{_count_key(splan.kernel, backend)}"] \
+            += 1
         dist, it, e_hi, e_lo, rounds = _async_sharded_fixed_point(
             splan.sharded, aux, dist0, mask0, kernel=splan.kernel,
             max_iterations=max_iterations, op=operators.resolve(op),
-            mesh=splan.mesh, **splan.static)
+            mesh=splan.mesh, backend=backend, **splan.static)
     else:
-        DISPATCH_COUNTS[f"shard:{splan.kernel}"] += 1
+        DISPATCH_COUNTS[f"shard:{_count_key(splan.kernel, backend)}"] += 1
         dist, it, e_hi, e_lo = _sharded_fixed_point(
             splan.sharded, aux, dist0, mask0, kernel=splan.kernel,
             max_iterations=max_iterations, op=operators.resolve(op),
-            mesh=splan.mesh, **splan.static)
+            mesh=splan.mesh, backend=backend, **splan.static)
         rounds = it
     jax.block_until_ready(dist)
     return dist, int(it), int(e_hi) * _LIMB + int(e_lo), int(rounds)
@@ -704,17 +810,22 @@ def run_fixed_point(splan: ShardedPlan, dist0, mask0, *,
 # sharded batched multi-source fixed point
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("max_iterations", "op", "mesh"))
+@partial(jax.jit, static_argnames=("max_iterations", "op", "mesh", "sched",
+                                   "backend"))
 def _sharded_batch_fixed_point(sg: ShardedCSRGraph, dist_b, mask_b, *,
                                max_iterations: int,
                                op: EdgeOp = operators.shortest_path,
-                               mesh=None):
+                               mesh=None,
+                               sched: Schedule = DEFAULT_SCHEDULE,
+                               backend: str = "xla"):
     """All K sources to their fixed points, sharded: the sharded WD step
     vmapped over the source axis inside one ``lax.while_loop`` — the
     multi-device counterpart of ``fused._batch_fixed_point`` (the
     per-row edge totals are already global after the in-``vmap``
-    ``psum``, so the limb fold matches it bit-for-bit)."""
-    TRACE_COUNTS["shard:batch"] += 1
+    ``psum``, so the limb fold matches it bit-for-bit).  ``backend``
+    swaps the per-shard relax lowering exactly as in
+    :func:`_sharded_fixed_point`."""
+    TRACE_COUNTS[f"shard:{_count_key('batch', backend)}"] += 1
 
     def body(sg_blk, dist_b, mask_b):
         sq = _squeeze(sg_blk)
@@ -727,7 +838,8 @@ def _sharded_batch_fixed_point(sg: ShardedCSRGraph, dist_b, mask_b, *,
             it, dist_b, mask_b, e_hi, e_lo = c
 
             def one(dist, mask):
-                dist, upd, e = _wd_step(sq, dist, mask, op=op)
+                dist, upd, e = _wd_step(sq, dist, mask, op=op,
+                                        backend=backend, sched=sched)
                 return dist, _any_across(upd), lax.psum(e, AXIS)
 
             dist_b, mask_b, e = jax.vmap(one)(dist_b, mask_b)
@@ -750,11 +862,13 @@ def _sharded_batch_fixed_point(sg: ShardedCSRGraph, dist_b, mask_b, *,
 
 def run_batch_fixed_point(sharded: ShardedCSRGraph, dist_b, mask_b, *,
                           mesh, op: EdgeOp = operators.shortest_path,
-                          max_iterations: int = 100000):
+                          max_iterations: int = 100000,
+                          sched: Schedule = DEFAULT_SCHEDULE,
+                          backend: str = "xla"):
     """Host wrapper for :func:`_sharded_batch_fixed_point`."""
-    DISPATCH_COUNTS["shard:batch"] += 1
+    DISPATCH_COUNTS[f"shard:{_count_key('batch', backend)}"] += 1
     dist_b, it, e_hi, e_lo = _sharded_batch_fixed_point(
         sharded, dist_b, mask_b, max_iterations=max_iterations,
-        op=operators.resolve(op), mesh=mesh)
+        op=operators.resolve(op), mesh=mesh, sched=sched, backend=backend)
     jax.block_until_ready(dist_b)
     return dist_b, int(it), int(e_hi) * _LIMB + int(e_lo)

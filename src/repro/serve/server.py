@@ -258,12 +258,30 @@ class GraphServer:
         return out
 
     def drain(self, max_steps: int = 100000) -> list[Response]:
-        """Step until the queue empties; returns all terminal responses."""
+        """Step until the queue empties; returns all terminal responses.
+
+        Raises :class:`RuntimeError` if ``max_steps`` turns cannot empty
+        the queue: silently returning would strand the queued requests
+        without a terminal :class:`Response`, violating the "every
+        submission reaches exactly one terminal Response" invariant
+        (docs/serving.md) — the caller must either raise ``max_steps``
+        or handle/reject the stragglers itself.  The responses already
+        collected ride on the exception (``.responses``)."""
         out: list[Response] = []
         for _ in range(max_steps):
             if not self._queue:
-                break
+                return out
             out.extend(self.step())
+        if self._queue:
+            err = RuntimeError(
+                f"drain(max_steps={max_steps}) exhausted its step budget "
+                f"with {len(self._queue)} request(s) still queued — "
+                f"raising instead of silently dropping them (every "
+                f"submission must reach exactly one terminal Response, "
+                f"docs/serving.md); raise max_steps or step()/reject the "
+                f"remainder explicitly")
+            err.responses = out
+            raise err
         return out
 
     def _dispatch(self, batch: list[Request], key: tuple) -> list[Response]:

@@ -261,14 +261,33 @@ def test_pre_backend_strategy_still_runs_on_xla_path():
 def test_backend_validation_errors():
     with pytest.raises(ValueError, match="backend"):
         engine.run(RMAT, 0, engine.make_strategy("WD"), backend="cuda")
-    with pytest.raises(ValueError, match="single-device"):
-        engine.run(RMAT, 0, engine.make_strategy("WD"), mode="fused",
-                   shards=1, backend="pallas")
     with pytest.raises(ValueError, match="backend"):
         engine.run_batch(RMAT, [0], backend="warp")
-    with pytest.raises(ValueError, match="single-device"):
-        engine.run_batch(RMAT, [0], mode="fused", shards=1,
-                         backend="pallas")
+
+
+def test_pallas_composes_with_shards():
+    """Regression for the old gate: ``backend="pallas"`` + ``shards=``
+    used to raise 'single-device'; the per-shard Pallas lowering with
+    the epilogue-fused ghost combine now runs and stays bit-identical
+    (docs/backends.md#sharded-pallas-the-fused-ghost-combine).  The
+    8-device matrix lives in tests/test_sharded.py; this in-process
+    check covers whatever width the host has (>= 1)."""
+    single = engine.run(ROAD, 0, engine.make_strategy("WD"), mode="fused",
+                        backend="pallas")
+    sharded = engine.run(ROAD, 0, engine.make_strategy("WD"), mode="fused",
+                         shards=1, backend="pallas")
+    np.testing.assert_array_equal(sharded.dist, single.dist)
+    assert sharded.iterations == single.iterations
+    assert sharded.edges_relaxed == single.edges_relaxed
+    assert sharded.backend == "pallas" and sharded.shards == 1
+
+    bs = engine.run_batch(ROAD, [0, 5], mode="fused", backend="pallas")
+    bh = engine.run_batch(ROAD, [0, 5], mode="fused", shards=1,
+                          backend="pallas")
+    np.testing.assert_array_equal(bh.dist, bs.dist)
+    assert bh.iterations == bs.iterations
+    assert bh.edges_relaxed == bs.edges_relaxed
+    assert bh.backend == "pallas"
 
 
 def test_backend_recorded_on_results():

@@ -148,6 +148,28 @@ def test_differential_sharded(strategy, op, gi, source):
     assert sharded.shards == N_SHARDS
 
 
+@pytest.mark.multi_device
+@pytest.mark.parametrize("strategy,op,gi,source",
+                         [c for c in CASES if c[0] in SHARDED_STRATEGIES])
+def test_differential_sharded_pallas(strategy, op, gi, source):
+    """The (backend="pallas", shards) cell of the deterministic matrix:
+    per-shard Pallas kernels with the ghost combine fused into the
+    kernel epilogue must stay bit-identical to the single-device fused
+    XLA run — one comparison pins both the backend and the shards axis
+    at once (docs/backends.md)."""
+    g = GRAPHS[gi]
+    single = engine.run(g, source, engine.make_strategy(strategy), op=op,
+                        mode="fused")
+    sharded = engine.run(g, source, engine.make_strategy(strategy), op=op,
+                         mode="fused", shards=N_SHARDS, backend="pallas")
+    np.testing.assert_array_equal(
+        sharded.dist, single.dist,
+        err_msg=f"{strategy}/{op}: sharded-pallas dist")
+    assert sharded.iterations == single.iterations
+    assert sharded.edges_relaxed == single.edges_relaxed
+    assert sharded.shards == N_SHARDS and sharded.backend == "pallas"
+
+
 @pytest.mark.parametrize("strategy,op,gi,source",
                          [c for c in CASES if c[0] in DELTA_STRATEGIES])
 def test_differential_delta_schedule(strategy, op, gi, source):

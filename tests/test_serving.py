@@ -243,9 +243,59 @@ def test_latency_percentiles_nearest_rank():
     assert stats["latency_p99"] == percentile(expect, 99) == 15.0
 
 
-# ---------------------------------------------------------------------------
-# batching policy: EDF ordering, compatibility groups, K-bucketing
-# ---------------------------------------------------------------------------
+def test_percentile_boundaries_pin_nearest_rank_contract():
+    # docs/serving.md: nearest-rank — always an observed value, with
+    # rank = max(1, ceil(n * p / 100)) and p=0 defined as the minimum
+    trace = [3.0, 1.0, 2.0, 5.0, 4.0]          # unsorted on purpose
+    assert percentile(trace, 0) == 1.0          # p=0 -> min
+    assert percentile(trace, 100) == 5.0        # p=100 -> max
+    assert percentile(trace, 50) == 3.0         # ceil(5*.5)=3rd of sorted
+    # every result is an element of the trace, never an interpolation
+    for p in (0, 1, 10, 25, 50, 75, 90, 99, 100):
+        assert percentile(trace, p) in trace
+
+    # single element: every percentile is that element
+    for p in (0, 37.5, 100):
+        assert percentile([7.25], p) == 7.25
+
+    # tied values: ranks land inside the tie run, still exact
+    tied = [2.0, 2.0, 2.0, 9.0]
+    assert percentile(tied, 0) == 2.0
+    assert percentile(tied, 50) == 2.0          # rank 2
+    assert percentile(tied, 75) == 2.0          # rank 3: last tie
+    assert percentile(tied, 76) == 9.0          # rank 4: past the run
+    assert percentile(tied, 100) == 9.0
+
+    # empty trace -> None; out-of-domain p -> ValueError
+    assert percentile([], 50) is None
+    for bad in (-0.001, 100.001):
+        with pytest.raises(ValueError):
+            percentile([1.0], bad)
+
+
+def test_drain_raises_on_exhausted_step_budget():
+    # drain() must never return with requests still queued — a silent
+    # partial drain would strand submissions without a terminal
+    # Response, violating the every-submission-terminates invariant
+    g = _graph()
+    clk = SimulatedClock()
+    srv = _server(g, clk, max_batch=1)
+    for s in (1, 2, 3):
+        assert srv.submit(Request(source=s, graph="g")) is None
+    with pytest.raises(RuntimeError, match="2 request\\(s\\) still queued"):
+        srv.drain(max_steps=1)
+    # the one completed response rides on the exception, and the
+    # stragglers stay queued (not dropped): a budgeted retry finishes
+    try:
+        srv.drain(max_steps=1)
+    except RuntimeError as e:
+        assert len(e.responses) == 1
+        assert e.responses[0].status == "ok"
+    rest = srv.drain()                          # default budget drains
+    assert [r.status for r in rest] == ["ok"]
+    assert srv.stats()["completed"] == 3
+    assert srv.stats()["submitted"] == 3
+    assert srv.drain(max_steps=0) == []         # empty queue: no raise
 
 def test_earliest_deadline_first_dispatch_order():
     g = _graph()

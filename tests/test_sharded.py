@@ -8,7 +8,9 @@ Two layers:
   documented CPU recipe) proving the acceptance criterion: a sharded
   fused run is bit-identical — dist, iterations, edges_relaxed — to the
   single-device fused AND stepped paths for every SHARDABLE strategy ×
-  built-in operator, plus the batched engine, CC seeding through
+  built-in operator, with a ``backend="pallas"`` leg running the
+  per-shard Pallas kernels + epilogue-fused ghost combine
+  (docs/backends.md), plus the batched engine, CC seeding through
   ``engine.fixed_point``, both partition methods, and the
   one-dispatch-per-traversal claim.  The subprocess keeps the 8-device
   override out of this process's jax state (same pattern as
@@ -110,6 +112,42 @@ for kw in (dict(switch_threshold=4, mdt=3), dict(switch_threshold=16, mdt=7)):
                          mode="fused", shards=8)
     check(f"HP-big/{kw['switch_threshold']}", sharded, single, stepped)
 
+# --- pallas backend: per-shard Pallas kernels with the ghost combine
+# fused into the kernel epilogue
+# (docs/backends.md#sharded-pallas-the-fused-ghost-combine)
+for strat in ("BS", "WD", "HP", "NS"):
+    single = engine.run(g, 0, engine.make_strategy(strat), mode="fused")
+    stepped = engine.run(g, 0, engine.make_strategy(strat))
+    sharded = engine.run(g, 0, engine.make_strategy(strat),
+                         mode="fused", shards=8, backend="pallas")
+    assert sharded.shards == 8 and sharded.backend == "pallas"
+    check(f"{strat}/pallas", sharded, single, stepped)
+
+# the non-min monoids through the fused epilogue (max-fold + psum)
+wp = engine.run(g, 0, engine.make_strategy("WD"), mode="fused",
+                op="widest_path")
+wps = engine.run(g, 0, engine.make_strategy("WD"), mode="fused",
+                 op="widest_path", shards=4, backend="pallas")
+check("WD/widest_path/pallas", wps, wp)
+rc = engine.run(dag, 0, engine.make_strategy("WD"), mode="fused",
+                op="reach_count")
+rcs = engine.run(dag, 0, engine.make_strategy("WD"), mode="fused",
+                 op="reach_count", shards=5, backend="pallas")
+check("WD/reach_count/pallas", rcs, rc)
+
+# sharded pallas keys its own dispatch/trace counters; repeating the
+# shape must not dispatch under (or retrace) the sharded-XLA keys
+dp = fused.DISPATCH_COUNTS["shard:pallas:WD"]
+tp = fused.TRACE_COUNTS["shard:pallas:WD"]
+dx = fused.DISPATCH_COUNTS["shard:WD"]
+res = engine.run(g, 0, engine.make_strategy("WD"), mode="fused",
+                 shards=8, backend="pallas")
+assert res.iterations > 1
+assert fused.DISPATCH_COUNTS["shard:pallas:WD"] == dp + 1
+assert fused.TRACE_COUNTS["shard:pallas:WD"] == tp, "sharded pallas retraced"
+assert fused.DISPATCH_COUNTS["shard:WD"] == dx, "xla counter disturbed"
+summary["cases"] += 1
+
 # --- edge accounting: each edge counted once across shards (regression)
 single = engine.run(g, 0, engine.make_strategy("WD"), mode="fused")
 sharded = engine.run(g, 0, engine.make_strategy("WD"), mode="fused",
@@ -162,7 +200,7 @@ def parity():
     env.pop("XLA_FLAGS", None)
     out = subprocess.run([sys.executable, "-c", SCRIPT], cwd=os.path.join(
         os.path.dirname(__file__), ".."), env=env, capture_output=True,
-        text=True, timeout=1200)
+        text=True, timeout=1800)
     assert out.returncode == 0, out.stderr[-4000:]
     return json.loads(out.stdout.strip().splitlines()[-1])
 
@@ -173,8 +211,9 @@ def test_sharded_bit_parity_matrix(parity):
     """Acceptance: 8-virtual-device sharded runs are bit-identical to the
     single-device paths for every SHARDABLE strategy × built-in op."""
     # 4 strategies × 3 monotone ops + 4 reach_count + 2 HP-big-branch +
+    # 4 pallas strategies + 2 pallas monoids + pallas counters +
     # 2 partition methods + batch + CC + dispatch counting
-    assert parity["cases"] >= 23
+    assert parity["cases"] >= 30
 
 
 @pytest.mark.slow
